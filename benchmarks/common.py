@@ -1,0 +1,27 @@
+"""Benchmark timing helpers (CPU wall-clock; roofline cells come from the
+dry-run, not from these timings)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median microseconds per call (after jit warmup)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def row(name: str, us: float, derived: str = "") -> str:
+    line = f"{name},{us:.1f},{derived}"
+    print(line, flush=True)
+    return line

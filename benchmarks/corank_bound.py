@@ -1,0 +1,70 @@
+"""Benchmark C1 — Proposition 1: co-rank iterations vs the log bound.
+
+Reports measured max/mean iterations against ``ceil(log2 min(m,n,i,m+n-i))``
+across sizes and input distributions, plus the time per co-rank call.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.core import co_rank_batch
+
+
+def _dataset(kind, m, n, rng):
+    if kind == "uniform":
+        a = np.sort(rng.integers(0, 1 << 30, m))
+        b = np.sort(rng.integers(0, 1 << 30, n))
+    elif kind == "disjoint":  # all of A < all of B (adversarial)
+        a = np.sort(rng.integers(0, 1 << 20, m))
+        b = np.sort(rng.integers(1 << 20, 1 << 21, n))
+    else:  # heavy duplicates
+        a = np.sort(rng.integers(0, 8, m))
+        b = np.sort(rng.integers(0, 8, n))
+    return jnp.asarray(a, jnp.int32), jnp.asarray(b, jnp.int32)
+
+
+def main():
+    rng = np.random.default_rng(0)
+    for m, n in [(1 << 14, 1 << 14), (1 << 18, 1 << 10), (1 << 20, 1 << 20)]:
+        for kind in ("uniform", "disjoint", "dups"):
+            a, b = _dataset(kind, m, n, rng)
+            ranks = jnp.asarray(
+                rng.integers(0, m + n + 1, 512), jnp.int32
+            )
+            res = co_rank_batch(ranks, a, b)
+            iters = np.asarray(res.iterations)
+            bounds = np.asarray(
+                [
+                    max(
+                        1,
+                        math.ceil(
+                            math.log2(
+                                max(
+                                    1,
+                                    min(m, n, max(int(i), 1), max(m + n - int(i), 1)),
+                                )
+                            )
+                        ),
+                    )
+                    for i in np.asarray(ranks)
+                ]
+            )
+            assert (iters <= bounds + 1).all(), "Prop 1 bound violated"
+            us = time_fn(
+                lambda r: co_rank_batch(r, a, b).j, ranks
+            ) / len(ranks)
+            row(
+                f"corank/{kind}/m{m}_n{n}",
+                us,
+                f"max_iters={iters.max()};bound={bounds.max()};"
+                f"mean_iters={iters.mean():.1f}",
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Benchmark C2 — Proposition 2: perfect balance vs the classic partition.
+
+For each input distribution: max/mean segment size of (a) the paper's
+co-rank partition (always ceil/floor), (b) the classic equidistant-splitter
+partition (up to 2x).  The 'derived' column is the load-imbalance factor
+max/ideal — on TPU this is exactly the tile-padding waste factor
+(DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.core import (
+    co_rank_batch,
+    partition_bounds,
+    partition_sizes_equidistant,
+)
+
+
+def main():
+    rng = np.random.default_rng(1)
+    m = n = 1 << 20
+    p = 64
+    cases = {
+        "uniform": (
+            np.sort(rng.integers(0, 1 << 30, m)),
+            np.sort(rng.integers(0, 1 << 30, n)),
+        ),
+        "disjoint": (
+            np.arange(m, dtype=np.int32),
+            np.arange(m, 2 * m, dtype=np.int32),
+        ),
+        "interleaved_runs": (
+            np.sort(np.repeat(np.arange(m // 64), 64)),
+            np.sort(np.repeat(np.arange(n // 64) * 2, 64)),
+        ),
+    }
+    for kind, (a, b) in cases.items():
+        a = jnp.asarray(a, jnp.int32)
+        b = jnp.asarray(b, jnp.int32)
+        # paper partition: exact output blocks
+        bounds = partition_bounds(m + n, p)
+        sizes_ours = np.diff(np.asarray(bounds))
+        # classic partition (2p segments for p PEs)
+        sizes_base = np.asarray(partition_sizes_equidistant(a, b, p))
+        ideal_ours = (m + n) / p
+        ideal_base = (m + n) / (2 * p)
+        us = time_fn(lambda: co_rank_batch(bounds, a, b).j)
+        row(
+            f"load_balance/corank/{kind}",
+            us,
+            f"max={sizes_ours.max()};imbalance={sizes_ours.max() / ideal_ours:.4f}",
+        )
+        us_b = time_fn(lambda: partition_sizes_equidistant(a, b, p))
+        row(
+            f"load_balance/equidistant/{kind}",
+            us_b,
+            f"max={sizes_base.max()};imbalance={sizes_base.max() / ideal_base:.4f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Generate the EXPERIMENTS.md §Dry-run table from the dry-run JSONs."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def main():
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        rec = json.load(open(path))
+        if "__" in os.path.basename(path)[:-5].split("__")[-1] or len(
+            os.path.basename(path)[:-5].split("__")
+        ) > 3:
+            continue  # perf variants live in §Perf
+        cell = f"{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec["status"] == "skipped":
+            rows.append(f"| {cell} | skipped | {rec['reason'][:58]} ||||")
+            continue
+        if rec["status"] != "ok":
+            rows.append(f"| {cell} | ERROR | {rec.get('error', '')[:58]} ||||")
+            continue
+        mem = rec["memory"]
+        coll = rec["collectives"]
+        w = rec.get("weighted", {})
+        rows.append(
+            f"| {cell} | ok | args {mem.get('argument_size_in_bytes', 0) / 2**30:.2f} + "
+            f"temp {mem.get('temp_size_in_bytes', 0) / 2**30:.2f} GiB/dev | "
+            f"{w.get('flops', 0):.2e} | "
+            f"{coll['total_bytes'] / 2**30:.2f} GiB "
+            f"(ar {coll['per_op_bytes'].get('all-reduce', 0) / 2**30:.1f} / "
+            f"ag {coll['per_op_bytes'].get('all-gather', 0) / 2**30:.1f} / "
+            f"a2a {coll['per_op_bytes'].get('all-to-all', 0) / 2**30:.1f}) | "
+            f"{rec['compile_s']:.0f}s |"
+        )
+    hdr = (
+        "| cell | status | per-device memory | HLO FLOPs/dev "
+        "(trip-weighted) | collective bytes/dev (per step) | compile |\n"
+        "|---|---|---|---|---|---|"
+    )
+    out = hdr + "\n" + "\n".join(rows) + "\n"
+    with open(os.path.join(RESULTS, "..", "dryrun_table.md"), "w") as f:
+        f.write(out)
+    print(out[:2000])
+    print(f"... {len(rows)} rows -> results/dryrun_table.md")
+
+
+if __name__ == "__main__":
+    main()

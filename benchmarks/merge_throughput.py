@@ -1,0 +1,62 @@
+"""Benchmark C4 — merge throughput: the paper's merge vs baselines.
+
+Compared on equal terms (jitted, 1-D arrays):
+  * rank-merge (ours, data-parallel form)
+  * partitioned two-finger merge (ours, Algorithm 2 with vmapped PEs)
+  * Pallas kernel in interpret mode (correctness path; TPU is the target)
+  * classic equidistant-splitter merge (the factor-2 baseline)
+  * lexicographic stable merge (the stability-workaround baseline)
+  * XLA's native sort of the concatenation (the "don't exploit
+    sortedness" baseline)
+Derived column: million elements merged per second.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.core import (
+    merge_by_ranking,
+    merge_equidistant,
+    merge_lexicographic,
+    merge_partitioned,
+)
+
+
+def main():
+    rng = np.random.default_rng(2)
+    for size in (1 << 16, 1 << 20):
+        a = jnp.asarray(np.sort(rng.integers(0, 1 << 30, size)), jnp.int32)
+        b = jnp.asarray(np.sort(rng.integers(0, 1 << 30, size)), jnp.int32)
+        total = 2 * size
+
+        def meps(us):
+            return f"{total / us:.1f}Melem/s"
+
+        us = time_fn(merge_by_ranking, a, b)
+        row(f"merge/rank/{total}", us, meps(us))
+        us = time_fn(lambda x, y: merge_partitioned(x, y, p=64), a, b)
+        row(f"merge/partitioned_p64/{total}", us, meps(us))
+        us = time_fn(lambda x, y: merge_equidistant(x, y, p=64), a, b)
+        row(f"merge/equidistant_p64/{total}", us, meps(us))
+        us = time_fn(merge_lexicographic, a, b)
+        row(f"merge/lexicographic/{total}", us, meps(us))
+        us = time_fn(
+            jnp.sort, jnp.concatenate([a, b])
+        )
+        row(f"merge/xla_sort_concat/{total}", us, meps(us))
+
+    # Pallas interpret mode is Python-speed; report once, small size.
+    from repro.kernels.merge import merge_pallas
+
+    size = 1 << 12
+    a = jnp.asarray(np.sort(rng.integers(0, 1 << 30, size)), jnp.int32)
+    b = jnp.asarray(np.sort(rng.integers(0, 1 << 30, size)), jnp.int32)
+    us = time_fn(lambda x, y: merge_pallas(x, y, tile=512), a, b)
+    row(f"merge/pallas_interpret/{2 * size}", us, f"{2 * size / us:.2f}Melem/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Profile one dry-run cell: top HBM-traffic and collective lines.
+
+  PYTHONPATH=src python benchmarks/profile_cell.py musicgen-medium train_4k \
+      [--multi-pod] [--override k=v ...]
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count="
+    f"{os.environ.get('DRYRUN_DEVICES', '512')} "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import ast
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--override", action="append", default=[])
+    ap.add_argument("--top", type=int, default=14)
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        try:
+            overrides[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            overrides[k] = v
+
+    from repro.launch.dryrun import build_cell
+    from repro.launch.hlo_stats import collective_bytes, hlo_flops_bytes, top_traffic
+
+    mesh, cfg, fn, cell_args = build_cell(
+        args.arch, args.shape, args.multi_pod, overrides or None
+    )
+    with mesh:
+        hlo = fn.lower(*cell_args).compile().as_text()
+    w = hlo_flops_bytes(hlo)
+    c = collective_bytes(hlo)
+    print(f"flops/dev {w['flops']:.3e} ({w['flops'] / 197e12:.3f}s)  "
+          f"mem {w['bytes'] / 819e9:.3f}s  coll {c['total_bytes'] / 50e9:.3f}s")
+    print(f"collectives: {c['per_op_bytes']}")
+    print("--- top traffic ---")
+    for gib, tag in top_traffic(hlo, args.top):
+        print(f"{gib:9.2f} GiB  {tag[:120]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Benchmark harness entry point: ``python -m benchmarks.run``.
+
+One section per paper claim/table (DESIGN.md §1, §9) plus the framework
+benchmarks and the roofline report.  Prints ``name,us_per_call,derived``
+CSV rows.
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (
+        corank_bound,
+        load_balance,
+        merge_throughput,
+        moe_dispatch,
+        roofline,
+        stability_cost,
+    )
+
+    print("name,us_per_call,derived")
+    sections = [
+        ("C1: co-rank iteration bound (Prop 1)", corank_bound.main),
+        ("C2: load balance vs classic partition (Prop 2)", load_balance.main),
+        ("C3: stability at zero cost", stability_cost.main),
+        ("C4: merge throughput vs baselines", merge_throughput.main),
+        ("F1: MoE dispatch (framework integration)", moe_dispatch.main),
+        ("G: roofline from dry-run artifacts", roofline.main),
+    ]
+    failures = 0
+    for title, fn in sections:
+        print(f"# --- {title} ---", flush=True)
+        try:
+            fn()
+        except Exception as e:  # keep the harness running, report at end
+            failures += 1
+            print(f"# SECTION FAILED: {title}: {type(e).__name__}: {e}",
+                  flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Benchmark C3 — stability at zero cost.
+
+The paper's claim: co-rank stability needs no key widening.  We measure
+the cost of the standard workaround (lexicographic (key, index) sort) vs
+our merge on the same inputs, and report the extra bytes the workaround
+materialises (an index array of the full output length).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.core import merge_by_ranking, merge_lexicographic
+
+
+def main():
+    rng = np.random.default_rng(3)
+    for size in (1 << 18,):
+        # heavy duplicates — stability actually matters here
+        a = jnp.asarray(np.sort(rng.integers(0, 64, size)), jnp.int32)
+        b = jnp.asarray(np.sort(rng.integers(0, 64, size)), jnp.int32)
+        total = 2 * size
+        us_ours = time_fn(merge_by_ranking, a, b)
+        us_lex = time_fn(merge_lexicographic, a, b)
+        extra_bytes = total * 4  # the int32 tie-break key
+        row(
+            f"stability/corank_merge/{total}",
+            us_ours,
+            "extra_bytes=0",
+        )
+        row(
+            f"stability/lexicographic/{total}",
+            us_lex,
+            f"extra_bytes={extra_bytes};slowdown={us_lex / us_ours:.2f}x",
+        )
+
+
+if __name__ == "__main__":
+    main()

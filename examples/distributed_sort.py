@@ -1,0 +1,50 @@
+"""Distributed merge/sort on an 8-device host mesh (the shard_map layer).
+
+    PYTHONPATH=src python examples/distributed_sort.py
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.distributed import (
+    distributed_co_rank,
+    distributed_merge,
+    distributed_sort,
+)
+
+mesh = Mesh(np.array(jax.devices()), ("x",))
+rng = np.random.default_rng(0)
+m = n = 512 * 8
+
+a = np.sort(rng.integers(0, 10_000, m)).astype(np.int32)
+b = np.sort(rng.integers(0, 10_000, n)).astype(np.int32)
+
+merged = jax.jit(
+    shard_map(
+        lambda aa, bb: distributed_merge(aa, bb, "x"),
+        mesh=mesh, in_specs=(P("x"), P("x")), out_specs=P("x"),
+    )
+)(jnp.asarray(a), jnp.asarray(b))
+assert (np.asarray(merged) == np.sort(np.concatenate([a, b]), kind="stable")).all()
+print("distributed merge over 8 devices: ok (each device produced exactly",
+      (m + n) // 8, "elements)")
+
+x = rng.integers(-1000, 1000, 8 * 1024).astype(np.int32)
+s = jax.jit(
+    shard_map(
+        lambda xx: distributed_sort(xx, "x"),
+        mesh=mesh, in_specs=(P("x"),), out_specs=P("x"),
+    )
+)(jnp.asarray(x))
+assert (np.asarray(s) == np.sort(x, kind="stable")).all()
+print("distributed sort over 8 devices: ok")

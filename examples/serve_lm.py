@@ -1,0 +1,13 @@
+"""Batched serving example: decode with KV cache + merge-sort top-k/top-p.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    serve.main([
+        "--arch", "qwen3-0.6b", "--smoke",
+        "--batch", "4", "--prompt-len", "8", "--tokens", "24",
+        "--sampler", "topp",
+    ])

@@ -1,0 +1,114 @@
+"""Architecture registry + input specs for every (arch x shape) cell."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.configs.deepseek_67b import CONFIG as deepseek_67b
+from repro.configs.deepseek_v3_671b import CONFIG as deepseek_v3_671b
+from repro.configs.dbrx_132b import CONFIG as dbrx_132b
+from repro.configs.granite_3_2b import CONFIG as granite_3_2b
+from repro.configs.internvl2_26b import CONFIG as internvl2_26b
+from repro.configs.mamba2_2_7b import CONFIG as mamba2_2_7b
+from repro.configs.musicgen_medium import CONFIG as musicgen_medium
+from repro.configs.qwen3_0_6b import CONFIG as qwen3_0_6b
+from repro.configs.qwen15_110b import CONFIG as qwen15_110b
+from repro.configs.zamba2_1_2b import CONFIG as zamba2_1_2b
+
+ARCHS: dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        musicgen_medium,
+        qwen3_0_6b,
+        deepseek_67b,
+        qwen15_110b,
+        granite_3_2b,
+        deepseek_v3_671b,
+        dbrx_132b,
+        internvl2_26b,
+        zamba2_1_2b,
+        mamba2_2_7b,
+    ]
+}
+
+
+def get_arch(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def cell_runnable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Is this (arch x shape) cell runnable?  long_500k needs a
+    sub-quadratic decode path: SSM/hybrid only (DESIGN.md §6)."""
+    if shape.name == "long_500k" and not cfg.ssm:
+        return False, "pure full-attention arch: no sub-quadratic 500k path"
+    return True, ""
+
+
+def smoke_config(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    over: dict = dict(
+        n_layers=2,
+        d_model=64,
+        d_ff=128,
+        vocab=256,
+        q_chunk=32,
+        kv_chunk=32,
+        remat="none",
+    )
+    if cfg.mla:
+        over.update(
+            n_heads=4, n_kv_heads=4, q_lora_rank=32, kv_lora_rank=16,
+            qk_nope_head_dim=8, qk_rope_head_dim=8, v_head_dim=8,
+        )
+    elif not cfg.ssm:
+        over.update(n_heads=4, n_kv_heads=2 if cfg.n_kv_heads < cfg.n_heads else 4)
+        if cfg.head_dim:
+            over.update(head_dim=16)
+    if cfg.moe:
+        over.update(n_experts=4, moe_top_k=2, moe_ff=32)
+        if cfg.first_k_dense:
+            over.update(first_k_dense=1, n_layers=3)
+    if cfg.ssm:
+        over.update(ssm_state=16, ssm_headdim=16, ssm_chunk=8)
+        if cfg.attn_every:
+            over.update(attn_every=2, n_heads=4, n_kv_heads=4, d_ff=128)
+    if cfg.frontend != "none":
+        over.update(frontend_tokens=8)
+    return dataclasses.replace(cfg, **over)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *, for_smoke=False):
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train/prefill: the training batch.  decode: (tokens, cache) for
+    ``serve_step`` — one new token against a seq_len-deep cache.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if shape.kind in ("train", "prefill"):
+        batch = {
+            "tokens": tok,
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "mask": jax.ShapeDtypeStruct((b, s), jnp.float32),
+        }
+        if cfg.frontend != "none":
+            batch["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16
+            )
+        return batch
+    # decode: one token + cache of depth seq_len
+    from repro.models.transformer import init_cache
+
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, b, s, dtype=jnp.bfloat16)
+    )
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "cache": cache,
+    }

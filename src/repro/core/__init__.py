@@ -1,0 +1,41 @@
+"""Core: the paper's contribution — co-ranking and load-balanced stable merge."""
+
+from repro.core.corank import CoRankResult, co_rank, co_rank_batch
+from repro.core.merge import (
+    merge_by_ranking,
+    merge_partitioned,
+    merge_segment_twofinger,
+    partition_bounds,
+)
+from repro.core.mergesort import (
+    merge_argsort,
+    merge_pairs_ranked,
+    merge_sort,
+    sort_key_val,
+)
+from repro.core.topk import merge_topk
+from repro.core.baselines import (
+    equidistant_partition,
+    merge_equidistant,
+    merge_lexicographic,
+    partition_sizes_equidistant,
+)
+
+__all__ = [
+    "CoRankResult",
+    "co_rank",
+    "co_rank_batch",
+    "merge_by_ranking",
+    "merge_partitioned",
+    "merge_segment_twofinger",
+    "partition_bounds",
+    "merge_argsort",
+    "merge_pairs_ranked",
+    "merge_sort",
+    "sort_key_val",
+    "merge_topk",
+    "equidistant_partition",
+    "merge_equidistant",
+    "merge_lexicographic",
+    "partition_sizes_equidistant",
+]

@@ -1,0 +1,117 @@
+"""Baselines the paper compares against — implemented for benchmarking.
+
+1. ``equidistant_partition`` / ``merge_equidistant`` — the classic PRAM/BSP
+   parallel merge (Shiloach-Vishkin / Hagerup-Rüb / BSP style): pick
+   equidistant splitters in *both* arrays, cross-rank each by binary search,
+   and let the 2p resulting segment pairs be merged independently.  Per-PE
+   segments are bounded by ``ceil(m/p) + ceil(n/p)`` but can be as small as
+   0, i.e. up to a **factor-2 load imbalance** versus the ideal
+   ``(m+n)/p`` — the inefficiency the paper removes.  On TPU the imbalance
+   becomes tile *padding*: a static-shape kernel must size every tile for
+   the worst case, so ~2x VMEM and compute are wasted (see DESIGN.md §3).
+
+2. ``merge_lexicographic`` — the standard stability workaround: merge on
+   widened (key, origin, index) lexicographic keys.  Costs an extra index
+   array, wider comparisons and the key-packing arithmetic; the paper's
+   co-rank merge needs none of that.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "equidistant_partition",
+    "merge_equidistant",
+    "merge_lexicographic",
+    "partition_sizes_equidistant",
+]
+
+
+@partial(jax.jit, static_argnames=("p",))
+def equidistant_partition(a: jax.Array, b: jax.Array, p: int):
+    """Classic splitter-based co-partition.
+
+    Returns ``(ja, ka, jb, kb)`` concatenated cut points: ``2p`` segments
+    given by merging the p equidistant A-splitters (with their B
+    cross-ranks) and the p equidistant B-splitters (with their A
+    cross-ranks).  Output: arrays ``j_cuts, k_cuts`` of shape (2p+1,) with
+    ``j_cuts[s] + k_cuts[s]`` the output offset of segment ``s``.
+    """
+    m, n = a.shape[0], b.shape[0]
+    # Equidistant positions in A and B.
+    ja = jnp.asarray([min(m, -(-m // p) * r) for r in range(p + 1)], jnp.int32)
+    kb = jnp.asarray([min(n, -(-n // p) * r) for r in range(p + 1)], jnp.int32)
+    # Cross-ranks via binary search (ties: consistent with stable merge —
+    # A splitters rank 'left' into B, B splitters rank 'right' into A).
+    ka = jnp.searchsorted(b, a[jnp.clip(ja, 0, m - 1)], side="left").astype(
+        jnp.int32
+    )
+    ka = jnp.where(ja >= m, n, ka).at[0].set(0)
+    jb = jnp.searchsorted(a, b[jnp.clip(kb, 0, n - 1)], side="right").astype(
+        jnp.int32
+    )
+    jb = jnp.where(kb >= n, m, jb).at[0].set(0)
+    # Union of cut points, ordered by output offset (stable on ties).
+    j_cuts = jnp.concatenate([ja, jb])
+    k_cuts = jnp.concatenate([ka, kb])
+    order = jnp.argsort(j_cuts + k_cuts, stable=True)
+    j_cuts, k_cuts = j_cuts[order], k_cuts[order]
+    # Drop the duplicated (0,0) start / (m,n) end by construction: keep 2p+1.
+    return j_cuts[1:], k_cuts[1:]
+
+
+@partial(jax.jit, static_argnames=("p",))
+def partition_sizes_equidistant(a: jax.Array, b: jax.Array, p: int):
+    """Per-segment output sizes of the classic partition (for the
+    load-imbalance benchmark; ideal is (m+n)/(2p) per segment)."""
+    j_cuts, k_cuts = equidistant_partition(a, b, p)
+    off = j_cuts + k_cuts
+    return jnp.diff(off)
+
+
+@partial(jax.jit, static_argnames=("p",))
+def merge_equidistant(a: jax.Array, b: jax.Array, p: int) -> jax.Array:
+    """Classic equidistant-splitter parallel merge (stable).
+
+    Static-shape realisation: every one of the 2p segments is merged in a
+    lane padded to the worst-case segment size ``ceil(m/p) + ceil(n/p)`` —
+    the factor-2 overhead the co-rank merge eliminates.
+    """
+    from repro.core.merge import merge_segment_twofinger
+
+    m, n = a.shape[0], b.shape[0]
+    j_cuts, k_cuts = equidistant_partition(a, b, p)
+    seg_len = -(-m // p) + -(-n // p)  # worst case — the padding cost
+
+    def one_seg(j_lo, j_hi, k_lo, k_hi):
+        return merge_segment_twofinger(a, b, j_lo, j_hi, k_lo, k_hi, seg_len)
+
+    segs = jax.vmap(one_seg)(
+        j_cuts[:-1], j_cuts[1:], k_cuts[:-1], k_cuts[1:]
+    )  # (2p, seg_len)
+    off = j_cuts + k_cuts
+    idx = off[:-1, None] + jnp.arange(seg_len)[None, :]
+    valid = idx < off[1:, None]
+    out = jnp.zeros((m + n,), dtype=jnp.result_type(a, b))
+    out = out.at[jnp.where(valid, idx, m + n)].set(segs, mode="drop")
+    return out
+
+
+@jax.jit
+def merge_lexicographic(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Stability via widened keys: sort (key, origin/index) pairs.
+
+    The standard trick the paper renders unnecessary.  Implemented with the
+    composite sort ``lax.sort`` over two operands — i.e. it pays for a
+    second full-width comparison key and the sort is O((m+n) log(m+n))
+    instead of O(m+n) merge work.
+    """
+    m, n = a.shape[0], b.shape[0]
+    keys = jnp.concatenate([a, b])
+    tie = jnp.arange(m + n, dtype=jnp.int32)  # global index encodes origin
+    sorted_keys, _ = jax.lax.sort((keys, tie), num_keys=2)
+    return sorted_keys

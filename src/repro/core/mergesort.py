@@ -1,0 +1,109 @@
+"""Stable merge sort built from the co-rank merge primitive.
+
+Bottom-up merge sort: ``log2(n)`` passes; pass ``w`` merges adjacent runs of
+width ``w`` into runs of width ``2w``.  Every pairwise merge is the stable
+rank-merge from ``repro.core.merge`` (Lemma 1 applied element-wise), so the
+whole sort is stable without key widening — the property the MoE router and
+the sampling stack rely on.
+
+The input is padded to the next power of two with ``+inf``-like sentinels
+(dtype max), which sort to the tail and are sliced off.  All passes are fully
+vectorised: the ``r`` runs of a pass are a leading batch dimension, so a pass
+is one fused XLA op sequence, and the whole sort is ``O(n log^2 n)``
+comparisons with depth ``O(log^2 n)`` — the standard EREW-style realisation
+of the paper's merge on a vector machine.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["merge_sort", "merge_argsort", "sort_key_val", "merge_pairs_ranked"]
+
+
+def _sentinel_max(dtype) -> jnp.ndarray:
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(jnp.inf, dtype)
+    return jnp.array(jnp.iinfo(dtype).max, dtype)
+
+
+def merge_pairs_ranked(keys: jax.Array, vals: jax.Array | None):
+    """Merge adjacent sorted runs: ``keys`` has shape ``(r, 2, w)`` where
+    ``keys[:, 0]`` and ``keys[:, 1]`` are each sorted; returns ``(r, 2w)``
+    stably merged (run 0 wins ties).  ``vals`` (same shape) is carried.
+    """
+    a, b = keys[:, 0, :], keys[:, 1, :]
+    r, w = a.shape
+    # Element-wise co-ranks (Lemma 1): A uses side='left' (<=), B 'right' (<).
+    pos_a = jnp.arange(w, dtype=jnp.int32)[None, :] + jax.vmap(
+        lambda x, y: jnp.searchsorted(y, x, side="left")
+    )(a, b).astype(jnp.int32)
+    pos_b = jnp.arange(w, dtype=jnp.int32)[None, :] + jax.vmap(
+        lambda x, y: jnp.searchsorted(y, x, side="right")
+    )(b, a).astype(jnp.int32)
+    out_k = jnp.zeros((r, 2 * w), dtype=keys.dtype)
+    out_k = out_k.at[jnp.arange(r)[:, None], pos_a].set(a, unique_indices=True)
+    out_k = out_k.at[jnp.arange(r)[:, None], pos_b].set(b, unique_indices=True)
+    if vals is None:
+        return out_k, None
+    va, vb = vals[:, 0, :], vals[:, 1, :]
+    out_v = jnp.zeros((r, 2 * w), dtype=vals.dtype)
+    out_v = out_v.at[jnp.arange(r)[:, None], pos_a].set(va, unique_indices=True)
+    out_v = out_v.at[jnp.arange(r)[:, None], pos_b].set(vb, unique_indices=True)
+    return out_k, out_v
+
+
+def _padded_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def sort_key_val(keys: jax.Array, vals: jax.Array):
+    """Stable sort of ``(keys, vals)`` by ``keys`` (1-D), merge-sort based."""
+    n = keys.shape[0]
+    if n <= 1:
+        return keys, vals
+    np2 = _padded_pow2(n)
+    pad = np2 - n
+    k = jnp.concatenate([keys, jnp.full((pad,), _sentinel_max(keys.dtype))])
+    v = jnp.concatenate([vals, jnp.zeros((pad,), vals.dtype)])
+    width = 1
+    while width < np2:
+        runs = np2 // (2 * width)
+        k2, v2 = merge_pairs_ranked(
+            k.reshape(runs, 2, width), v.reshape(runs, 2, width)
+        )
+        k, v = k2.reshape(np2), v2.reshape(np2)
+        width *= 2
+    return k[:n], v[:n]
+
+
+def merge_sort(x: jax.Array) -> jax.Array:
+    """Stable merge sort of a 1-D array."""
+    n = x.shape[0]
+    if n <= 1:
+        return x
+    np2 = _padded_pow2(n)
+    k = jnp.concatenate([x, jnp.full((np2 - n,), _sentinel_max(x.dtype))])
+    width = 1
+    while width < np2:
+        runs = np2 // (2 * width)
+        k, _ = merge_pairs_ranked(k.reshape(runs, 2, width), None)
+        k = k.reshape(np2)
+        width *= 2
+    return k[:n]
+
+
+def merge_argsort(x: jax.Array) -> jax.Array:
+    """Stable argsort (equal keys keep input order) via sort_key_val."""
+    _, idx = sort_key_val(x, jnp.arange(x.shape[0], dtype=jnp.int32))
+    return idx
+
+
+merge_sort_jit = jax.jit(merge_sort)
+sort_key_val_jit = jax.jit(sort_key_val)

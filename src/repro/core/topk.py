@@ -1,0 +1,80 @@
+"""Top-k selection built on the co-rank merge primitive.
+
+Two-stage tournament (the classic distributed-selection shape, with every
+stage expressed as stable merges):
+
+  1. split the row into blocks of ``block`` elements, merge-sort each block
+     descending (vectorised over blocks),
+  2. repeatedly *merge* adjacent blocks' candidate lists pairwise — after a
+     merge only the top ``k`` of the ``2k`` candidates can survive, so each
+     round halves the number of candidate lists at constant width ``k``.
+
+Stability: equal keys resolve to the lower original index (A-run before
+B-run, and in-block sort is stable), matching ``jax.lax.top_k`` semantics.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mergesort import merge_pairs_ranked
+
+__all__ = ["merge_topk"]
+
+
+def _desc_sort_blocks(keys: jax.Array, vals: jax.Array):
+    """Stable descending sort within each row of ``keys``/``vals`` (r, w)."""
+    r, w = keys.shape
+    width = 1
+    k, v = keys, vals
+    while width < w:
+        runs = (r * w) // (2 * width)
+        k2, v2 = merge_pairs_ranked(
+            k.reshape(runs, 2, width), v.reshape(runs, 2, width)
+        )
+        k, v = k2.reshape(r, w), v2.reshape(r, w)
+        width *= 2
+    return k, v
+
+
+@partial(jax.jit, static_argnames=("k", "block"))
+def merge_topk(x: jax.Array, k: int, block: int = 128):
+    """Top-k of a 1-D array: returns ``(values, indices)`` descending.
+
+    Keys are negated so the underlying ascending stable merge yields a
+    descending order with ties broken toward the lower index.
+    """
+    n = x.shape[0]
+    block = max(block, k)
+    nb = -(-n // block)
+    pad = nb * block - n
+    neg = -x.astype(jnp.float32) if jnp.issubdtype(x.dtype, jnp.floating) else -x
+    sentinel = jnp.array(jnp.inf, neg.dtype) if jnp.issubdtype(
+        neg.dtype, jnp.floating
+    ) else jnp.array(jnp.iinfo(neg.dtype).max, neg.dtype)
+    keys = jnp.concatenate([neg, jnp.full((pad,), sentinel, neg.dtype)])
+    idx = jnp.arange(nb * block, dtype=jnp.int32)
+    keys = keys.reshape(nb, block)
+    idx = idx.reshape(nb, block)
+    keys, idx = _desc_sort_blocks(keys, idx)  # ascending in negated keys
+    keys, idx = keys[:, :k], idx[:, :k]  # per-block top-k candidates
+
+    # Tournament: pairwise merge candidate lists, keep top-k each round.
+    while keys.shape[0] > 1:
+        r = keys.shape[0]
+        if r % 2 == 1:  # odd: carry the last list through unchanged
+            keys = jnp.concatenate(
+                [keys, jnp.full((1, k), sentinel, keys.dtype)]
+            )
+            idx = jnp.concatenate([idx, jnp.zeros((1, k), idx.dtype)])
+            r += 1
+        mk, mi = merge_pairs_ranked(
+            keys.reshape(r // 2, 2, k), idx.reshape(r // 2, 2, k)
+        )
+        keys, idx = mk[:, :k], mi[:, :k]
+
+    vals = -keys[0]
+    return vals.astype(x.dtype), idx[0]

@@ -1,0 +1,118 @@
+"""Deterministic, resumable data pipeline with merge-sort length bucketing.
+
+Production constraints this implements:
+
+* **Determinism / resumability**: sample identity is a pure function of
+  (seed, epoch, index) — a restarted job regenerates the exact stream with
+  no state files (fault tolerance: DESIGN.md §8).
+* **Sharding**: each data-parallel rank reads a disjoint strided slice.
+* **Length bucketing via the paper's sort**: documents are stably
+  merge-sorted by length before packing, so each global batch packs
+  near-equal token counts; stability keeps document order deterministic
+  within a length class (important for reproducible curriculum).
+* **Packing**: greedy fill of (seq_len)-token rows from the sorted stream
+  with EOS separators and loss-mask for padding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+from repro.core.mergesort import sort_key_val
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    batch: int  # per-host batch
+    seed: int = 0
+    mean_doc_len: int = 512
+    eos: int = 0
+
+
+def synthetic_doc(dc: DataConfig, epoch: int, idx: int) -> np.ndarray:
+    """A deterministic 'document' with *learnable* structure: an affine
+    successor chain ``t_{n+1} = (a * t_n + c) mod V`` with occasional random
+    restarts — a model that learns the per-(a, c) transition drives loss
+    well below log V, so end-to-end training descends measurably."""
+    rng = np.random.default_rng(
+        np.uint64(dc.seed) * np.uint64(1_000_003)
+        + np.uint64(epoch) * np.uint64(10_007)
+        + np.uint64(idx)
+    )
+    ln = int(rng.integers(dc.mean_doc_len // 4, dc.mean_doc_len * 2))
+    stride = int(rng.integers(1, 4))  # per-doc stride, inferable from context
+    alphabet = min(dc.vocab - 1, 1024)
+    out = np.empty(ln, np.int64)
+    t = int(rng.integers(0, alphabet))
+    for i in range(ln):
+        out[i] = 1 + t
+        if rng.random() < 0.02:  # restart: irreducible entropy floor
+            t = int(rng.integers(0, alphabet))
+        else:
+            t = (t + stride) % alphabet
+    return out.astype(np.int32)
+
+
+def bucket_by_length(lengths: np.ndarray) -> np.ndarray:
+    """Stable merge-argsort of document lengths (the paper's sort)."""
+    keys = jnp.asarray(lengths, jnp.int32)
+    _, order = sort_key_val(keys, jnp.arange(len(lengths), dtype=jnp.int32))
+    return np.asarray(order)
+
+
+def pack_documents(docs, dc: DataConfig):
+    """Pack docs into (batch, seq_len) rows with EOS separators.
+
+    Returns tokens, labels (shift-by-one), mask (0 on pad)."""
+    rows = np.full((dc.batch, dc.seq_len + 1), dc.eos, np.int32)
+    mask = np.zeros((dc.batch, dc.seq_len + 1), np.float32)
+    r, col = 0, 0
+    for doc in docs:
+        take = doc[: dc.seq_len]  # clamp overlong docs
+        while len(take) and r < dc.batch:
+            space = dc.seq_len + 1 - col
+            n = min(space, len(take) + 1)  # +1 for EOS
+            rows[r, col : col + n - 1] = take[: n - 1]
+            mask[r, col : col + n - 1] = 1.0
+            col += n
+            take = take[n - 1 :]
+            if col >= dc.seq_len + 1:
+                r, col = r + 1, 0
+        if r >= dc.batch:
+            break
+    tokens = rows[:, :-1]
+    labels = rows[:, 1:]
+    return tokens, labels.astype(np.int32), mask[:, 1:]
+
+
+def batches(dc: DataConfig, *, rank: int = 0, world: int = 1,
+            start_step: int = 0) -> Iterator[dict]:
+    """Infinite deterministic batch stream for one data-parallel rank.
+
+    ``start_step`` resumes mid-epoch after a restart (pure recomputation).
+    Each step consumes a window of documents, buckets them by length with
+    the stable merge sort, and packs.
+    """
+    docs_per_step = dc.batch * max(dc.seq_len // dc.mean_doc_len, 1) * 2
+    step = start_step
+    while True:
+        epoch = step >> 20
+        base = (step % (1 << 20)) * docs_per_step * world
+        idxs = [base + rank + world * i for i in range(docs_per_step)]
+        docs = [synthetic_doc(dc, epoch, i) for i in idxs]
+        order = bucket_by_length(np.asarray([len(d) for d in docs]))
+        docs = [docs[i] for i in order]
+        tokens, labels, mask = pack_documents(docs, dc)
+        yield {
+            "tokens": jnp.asarray(tokens),
+            "labels": jnp.asarray(labels),
+            "mask": jnp.asarray(mask),
+            "step": step,
+        }
+        step += 1

@@ -1,0 +1,55 @@
+"""Public kernel entry points: dispatch Pallas-on-TPU vs pure-XLA fallback.
+
+Framework code (MoE router, sampler, data pipeline) calls these; the
+backend switch keeps the CPU container, interpret-mode validation and real
+TPU deployment on one code path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.merge import merge_pallas
+
+__all__ = ["stable_merge", "stable_sort", "default_backend"]
+
+
+def default_backend() -> str:
+    """'pallas' on TPU, 'xla' elsewhere (CPU/GPU containers)."""
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "tile", "interpret"))
+def stable_merge(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    backend: str | None = None,
+    tile: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Stable merge of two ordered 1-D arrays.
+
+    backend: 'pallas' (TPU kernel; interpret-mode on CPU), 'xla'
+    (rank-merge via searchsorted — the pure-jnp oracle), or None = auto.
+    """
+    backend = backend or default_backend()
+    if backend == "pallas":
+        interp = (jax.default_backend() != "tpu") if interpret is None else interpret
+        return merge_pallas(a, b, tile=tile, interpret=interp)
+    return ref.merge_ref(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def stable_sort(x: jax.Array, *, backend: str | None = None) -> jax.Array:
+    """Stable 1-D sort; merge-sort on the co-rank primitive."""
+    from repro.core.mergesort import merge_sort
+
+    backend = backend or default_backend()
+    if backend == "xla_native":  # escape hatch: XLA's own sort
+        return jnp.sort(x, stable=True)
+    return merge_sort(x)

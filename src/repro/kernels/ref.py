@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the Pallas kernels (no Pallas imports here)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["merge_ref", "merge_np", "sort_ref", "topk_ref"]
+
+
+def merge_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Stable merge oracle: element-wise co-ranking in pure jnp."""
+    m, n = a.shape[0], b.shape[0]
+    pos_a = jnp.arange(m, dtype=jnp.int32) + jnp.searchsorted(
+        b, a, side="left"
+    ).astype(jnp.int32)
+    pos_b = jnp.arange(n, dtype=jnp.int32) + jnp.searchsorted(
+        a, b, side="right"
+    ).astype(jnp.int32)
+    out = jnp.zeros((m + n,), dtype=jnp.result_type(a, b))
+    out = out.at[pos_a].set(a, unique_indices=True)
+    out = out.at[pos_b].set(b, unique_indices=True)
+    return out
+
+
+def merge_np(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """NumPy oracle: stable merge == stable sort of the concatenation."""
+    return np.sort(np.concatenate([a, b]), kind="stable")
+
+
+def sort_ref(x: jax.Array) -> jax.Array:
+    return jnp.sort(x, stable=True)
+
+
+def topk_ref(x: jax.Array, k: int):
+    neg = jnp.argsort(-x, stable=True)[:k]
+    return x[neg], neg.astype(jnp.int32)

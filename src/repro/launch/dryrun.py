@@ -1,0 +1,345 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={os.environ.get('DRYRUN_DEVICES', '512')} "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the production mesh (16x16 or 2x16x16 host
+devices), constructs ShapeDtypeStruct stand-ins for params / optimizer
+state / batch / cache (nothing is ever allocated), jits the real step
+function with the real sharding trees, and runs ``.lower().compile()``.
+``memory_analysis()`` proves the cell fits; ``cost_analysis()`` plus the
+collective bytes parsed from the partitioned HLO feed §Roofline.
+
+Results are cached as JSON under results/dryrun/ (one file per cell);
+``benchmarks/roofline.py`` turns them into the EXPERIMENTS.md tables.
+
+Usage:
+  python -m repro.launch.dryrun --all                     # every cell, both meshes
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k --multi-pod
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.configs.registry import ARCHS, cell_runnable, input_specs
+from repro.launch.hlo_stats import collective_bytes, hlo_flops_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import param_sharding, resolve_spec
+from repro.models import layers as model_layers
+from repro.models.transformer import (
+    Cache,
+    cache_specs,
+    decode_step,
+    init_params,
+    prefill_logits,
+)
+from repro.train.optimizer import AdamWState, adamw_init
+from repro.train.train_step import build_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../../results/dryrun")
+
+# Per-cell gradient-accumulation overrides: keep per-microbatch activation
+# memory (L x B_micro x S x D x 2B of remat carries per device) inside HBM.
+GRAD_ACCUM = {
+    ("deepseek-67b", "train_4k"): 16,
+    ("qwen1.5-110b", "train_4k"): 16,
+    ("deepseek-v3-671b", "train_4k"): 32,
+    ("dbrx-132b", "train_4k"): 16,
+    ("internvl2-26b", "train_4k"): 8,
+    ("musicgen-medium", "train_4k"): 2,
+    ("granite-3-2b", "train_4k"): 2,
+    ("zamba2-1.2b", "train_4k"): 2,
+    ("mamba2-2.7b", "train_4k"): 2,
+}
+
+
+def effective_batch_axes(mesh, batch: int, layout: str = "tp"):
+    """Greedy prefix of the DP-capable axes whose product divides the
+    batch.  layout='fsdp' adds 'model' to the pool: the model axis stops
+    doing TP and joins data parallelism (ZeRO-3 weight gathering)."""
+    pool = ("pod", "data", "model") if layout == "fsdp" else ("pod", "data")
+    axes = []
+    prod = 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for a in pool:
+        if a in sizes and batch % (prod * sizes[a]) == 0:
+            axes.append(a)
+            prod *= sizes[a]
+    return tuple(axes)
+
+
+def sanitize_specs(sds_tree, spec_tree, mesh):
+    """Drop sharding on any axis that does not evenly divide the dim —
+    e.g. vocab 49155 or 24 attention heads on a 16-wide model axis fall
+    back to replication on that axis (standard GQA practice for
+    n_kv < TP)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fix(sds, spec):
+        if not isinstance(spec, P):
+            return spec
+        entries = list(spec) + [None] * (len(sds.shape) - len(spec))
+        out = []
+        for dim, entry in zip(sds.shape, entries):
+            if entry is None:
+                out.append(None)
+                continue
+            axs = entry if isinstance(entry, (tuple, list)) else (entry,)
+            axs = [a for a in axs if a in sizes]
+            prod = 1
+            kept = []
+            for a in axs:
+                if dim % (prod * sizes[a]) == 0:
+                    kept.append(a)
+                    prod *= sizes[a]
+            out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+        return P(*out)
+
+    return jax.tree.map(
+        fix, sds_tree, spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+def _shardings(tree_specs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, resolve_spec(s, mesh)),
+        tree_specs,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool,
+               overrides: dict | None = None):
+    """Returns (jitted_fn, example_args_sds) for one cell."""
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    merged = {"grad_accum": GRAD_ACCUM.get((arch, shape_name), 1)}
+    merged.update(overrides or {})
+    cfg = dataclasses.replace(cfg, **merged)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ba = effective_batch_axes(mesh, shape.global_batch, cfg.layout)
+    model_layers.set_batch_axes(ba)  # residual-stream constraints
+
+    # abstract params + specs (captured via trace side-channel)
+    box = {}
+
+    def only_params(key):
+        p, s = init_params(cfg, key)
+        box["specs"] = s
+        return p
+
+    params_sds = jax.eval_shape(only_params, jax.random.key(0))
+    pspecs = sanitize_specs(params_sds, box["specs"], mesh)
+    psh = _shardings(pspecs, mesh)
+
+    batch_sds = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        opt_sds = jax.eval_shape(
+            lambda p: adamw_init(p, dtype=jnp.dtype(cfg.adam_dtype)), params_sds
+        )
+        osh = AdamWState(
+            step=NamedSharding(mesh, P()), m=psh.copy(), v=psh.copy()
+        )
+        bsh = {
+            k: NamedSharding(mesh, P(ba, *(None,) * (len(v.shape) - 1)))
+            for k, v in batch_sds.items()
+        }
+        step_fn = build_train_step(cfg)
+        fn = jax.jit(
+            step_fn,
+            in_shardings=(psh, osh, bsh, NamedSharding(mesh, P())),
+            out_shardings=(psh, osh, None),
+            donate_argnums=(0, 1),
+        )
+        args = (params_sds, opt_sds, batch_sds,
+                jax.ShapeDtypeStruct((), jnp.int32))
+        return mesh, cfg, fn, args
+
+    if shape.kind == "prefill":
+        bsh = {
+            k: NamedSharding(mesh, P(ba, *(None,) * (len(v.shape) - 1)))
+            for k, v in batch_sds.items()
+        }
+
+        def pf(params, batch):
+            return prefill_logits(
+                cfg, params, batch["tokens"], batch.get("frontend_embeds")
+            )
+
+        fn = jax.jit(pf, in_shardings=(psh, bsh), out_shardings=None)
+        return mesh, cfg, fn, (params_sds, batch_sds)
+
+    # decode
+    cache_sds = batch_sds["cache"]
+    cspec_tree = cache_specs(cfg, ba)
+    cspecs = sanitize_specs(
+        Cache(cache_sds.kind, cache_sds.data, jax.ShapeDtypeStruct((), jnp.int32)),
+        Cache(cspec_tree.kind, cspec_tree.data, P()),
+        mesh,
+    )
+    csh = jax.tree.map(
+        lambda s: NamedSharding(mesh, resolve_spec(s, mesh)),
+        cspecs,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+    tsh = NamedSharding(mesh, P(ba, None))
+
+    def dc(params, cache, tokens):
+        return decode_step(cfg, params, cache, tokens)
+
+    fn = jax.jit(
+        dc,
+        in_shardings=(psh, csh, tsh),
+        out_shardings=(None, csh),
+        donate_argnums=(1,),
+    )
+    return mesh, cfg, fn, (params_sds, cache_sds, batch_sds["tokens"])
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             force: bool = False, overrides: dict | None = None,
+             tag: str = "") -> dict:
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_tag}" + (f"__{tag}" if tag else "")
+    out_path = os.path.join(out_dir, cell_id + ".json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    cfg0 = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    ok, why = cell_runnable(cfg0, shape)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_tag,
+        "kind": shape.kind, "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+        "params": cfg0.param_count(),
+        "active_params": cfg0.active_param_count(),
+    }
+    if not ok:
+        rec.update(status="skipped", reason=why)
+    else:
+        try:
+            t0 = time.time()
+            mesh, cfg, fn, args = build_cell(
+                arch, shape_name, multi_pod, overrides
+            )
+            with mesh:
+                lowered = fn.lower(*args)
+                t_lower = time.time() - t0
+                compiled = lowered.compile()
+                t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+            coll = collective_bytes(hlo)
+            weighted = hlo_flops_bytes(hlo)
+            rec.update(
+                status="ok",
+                lower_s=round(t_lower, 2),
+                compile_s=round(t_compile, 2),
+                grad_accum=cfg.grad_accum,
+                memory={
+                    k: int(getattr(mem, k))
+                    for k in (
+                        "argument_size_in_bytes",
+                        "output_size_in_bytes",
+                        "temp_size_in_bytes",
+                        "generated_code_size_in_bytes",
+                    )
+                    if hasattr(mem, k)
+                },
+                cost={
+                    k: float(v)
+                    for k, v in (cost or {}).items()
+                    if isinstance(v, (int, float)) and k in (
+                        "flops", "transcendentals", "bytes accessed",
+                        "bytes accessed output", "optimal_seconds",
+                    )
+                },
+                collectives=coll,
+                weighted=weighted,  # trip-count-weighted per-device FLOPs/bytes
+                hlo_bytes=len(hlo),
+            )
+        except Exception as e:  # record failures — they are bugs to fix
+            rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                       trace=traceback.format_exc()[-3000:])
+    os.makedirs(out_dir, exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = rec["status"]
+    extra = ""
+    if status == "ok":
+        arg_gb = rec["memory"].get("argument_size_in_bytes", 0) / 2**30
+        tmp_gb = rec["memory"].get("temp_size_in_bytes", 0) / 2**30
+        extra = (f" args={arg_gb:.2f}GiB temp={tmp_gb:.2f}GiB "
+                 f"coll={rec['collectives']['total_bytes'] / 2**30:.2f}GiB "
+                 f"compile={rec['compile_s']:.0f}s")
+    print(f"[{cell_id}] {status}{extra}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(RESULTS_DIR))
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg override key=value (python literal), for "
+                         "§Perf variants; requires --tag")
+    ap.add_argument("--tag", default="", help="variant tag for the JSON name")
+    args = ap.parse_args()
+
+    import ast
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        try:
+            overrides[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            overrides[k] = v
+
+    meshes = []
+    if args.multi_pod or not args.single_pod:
+        meshes.append(True)
+    if args.single_pod or not args.multi_pod:
+        meshes.append(False)
+    meshes = sorted(set(meshes))  # False (single) first
+
+    archs = [args.arch] if args.arch else sorted(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    if args.all:
+        archs, shapes = sorted(ARCHS), list(SHAPES)
+
+    n_bad = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, args.out, force=args.force,
+                               overrides=overrides or None, tag=args.tag)
+                if rec["status"] == "error":
+                    n_bad += 1
+    print(f"done; {n_bad} errors")
+    raise SystemExit(1 if n_bad else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,373 @@
+"""Parse compiled HLO text for collective-traffic statistics.
+
+``compiled.as_text()`` (post-SPMD-partitioning HLO) names every collective
+op with its output shape.  Collectives inside ``while`` bodies (scan over
+layers, grad-accum loop) execute once per trip, so we extract each loop's
+trip count from its condition computation and multiply through the call
+graph — otherwise a 95-layer model would under-count its collective bytes
+95x.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# computation headers: '%name (params...) -> type {' — params may contain
+# nested parens (tuple types), so match the name and the trailing '-> ... {'
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[8,512]' -> bytes; tuples: sum of components."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def split_computations(hlo: str) -> dict[str, str]:
+    """Map computation name -> body text."""
+    comps: dict[str, str] = {}
+    cur_name, cur_lines = None, []
+    for line in hlo.splitlines():
+        m = _COMP_HDR.match(line.strip())
+        if m:
+            if cur_name:
+                comps[cur_name] = "\n".join(cur_lines)
+            cur_name = m.group(1)
+            cur_lines = [line]
+        elif cur_name is not None:
+            cur_lines.append(line)
+            if line.strip() == "}":
+                comps[cur_name] = "\n".join(cur_lines)
+                cur_name, cur_lines = None, []
+    if cur_name:
+        comps[cur_name] = "\n".join(cur_lines)
+    return comps
+
+
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)"
+)
+_CALL_RE = re.compile(r"(?:call|fusion)\(.*?\).*?calls=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"=\s*s(?:32|64)\[\]\s*constant\((\d+)\)")
+
+
+def _trip_count(cond_body: str) -> int:
+    """Heuristic: largest integer constant in the condition computation
+    (scan conditions compare the induction variable against the length)."""
+    consts = [int(c) for c in _CONST_RE.findall(cond_body)]
+    return max(consts) if consts else 1
+
+
+def _multipliers(comps: dict[str, str]) -> dict[str, int]:
+    """Execution-count multiplier per computation (while trip counts,
+    composed through the call graph)."""
+    edges: dict[str, list[tuple[str, int]]] = defaultdict(list)
+    for name, body in comps.items():
+        for m in _WHILE_RE.finditer(body):
+            cond, loop_body = m.group(1), m.group(2)
+            trips = _trip_count(comps.get(cond, ""))
+            edges[name].append((loop_body, trips))
+            edges[name].append((cond, trips))
+        for m in _CALL_RE.finditer(body):
+            edges[name].append((m.group(1), 1))
+    entry = None
+    for name in comps:
+        if "entry" in name.lower() or name.startswith("main"):
+            entry = name
+            break
+    if entry is None and comps:
+        entry = next(iter(comps))
+    mult: dict[str, int] = defaultdict(int)
+    mult[entry] = 1
+    stack = [entry]
+    seen = set()
+    while stack:
+        cur = stack.pop()
+        for child, k in edges.get(cur, []):
+            key = (cur, child)
+            if key in seen:
+                continue
+            seen.add(key)
+            mult[child] += mult[cur] * k
+            stack.append(child)
+    return dict(mult)
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_DOT_RE = re.compile(r"\bdot\(\s*%?([\w\.\-]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_LHS_BATCH_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+
+
+def _first_shape(txt: str):
+    m = _SHAPE_RE.search(txt)
+    if not m:
+        return None, 0
+    dt, dims = m.group(1), m.group(2)
+    shape = [int(d) for d in dims.split(",")] if dims else []
+    return shape, _DTYPE_BYTES.get(dt, 0)
+
+
+def hlo_flops_bytes(hlo: str) -> dict:
+    """Trip-count-weighted FLOPs (dots, x2 MAC) and HBM-traffic estimate.
+
+    XLA's ``cost_analysis`` counts each while body ONCE; a 61-layer scanned
+    model would be undercounted ~61x.  This walks the partitioned module
+    with per-computation execution multipliers.  Byte traffic is estimated
+    as 2x the produced bytes of every non-fused op (read ~= write on
+    average); it is an estimate, which is all a static analysis can give.
+    """
+    comps = split_computations(hlo)
+    mult = _multipliers(comps)
+
+    # global symbol table: op name -> result shape text
+    symbols: dict[str, str] = {}
+    for body in comps.values():
+        for line in body.splitlines():
+            m = _DEF_RE.match(line)
+            if m:
+                symbols[m.group(1)] = m.group(2)
+
+    # computations that are fusion internals (counted at the fusion site)
+    fused_internal: set[str] = set()
+    for body in comps.values():
+        for line in body.splitlines():
+            if re.search(r"\bfusion\(", line):
+                mm = re.search(r"calls=%?([\w\.\-]+)", line)
+                if mm:
+                    fused_internal.add(mm.group(1))
+
+    flops = 0
+    bytes_rw = 0
+    for name, body in comps.items():
+        w = mult.get(name, 0)
+        if w == 0:
+            w = 1 if name not in fused_internal else 0
+        if w == 0:
+            continue
+        internal = name in fused_internal
+        for line in body.splitlines():
+            m = _DEF_RE.match(line)
+            if m is None:
+                continue
+            rhs = m.group(2)
+            dm = _DOT_RE.search(rhs)
+            if dm:
+                out_shape, _ = _first_shape(rhs)
+                lhs_txt = symbols.get(dm.group(1), "")
+                lhs_shape, _ = _first_shape(lhs_txt)
+                cm = _LHS_CONTRACT_RE.search(rhs)
+                contract = 1
+                if lhs_shape and cm and cm.group(1):
+                    for d in cm.group(1).split(","):
+                        di = int(d)
+                        if di < len(lhs_shape):
+                            contract *= lhs_shape[di]
+                out_n = 1
+                for d in out_shape or []:
+                    out_n *= d
+                flops += 2 * out_n * contract * w
+            if not internal:
+                bytes_rw += _line_traffic(rhs, symbols, w) * w
+    return {"flops": int(flops), "bytes": int(bytes_rw)}
+
+
+# ops that move no data (aliases, control flow, loop plumbing); collectives
+# are excluded here because their traffic is charged to the collective term
+_FREE_OPS = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "while", "conditional", "after-all", "partition-id", "replica-id",
+    "bitcast-convert", "all-reduce", "all-gather", "reduce-scatter",
+    "all-to-all", "collective-permute", "all-reduce-start",
+    "all-reduce-done", "all-gather-start", "all-gather-done", "domain",
+    "opt-barrier",
+}
+_OPNAME_RE = re.compile(r"(?:^|\s|\})([a-z][a-z0-9\-\.]*)\(")
+_DUS_RE = re.compile(r"dynamic-update-slice\(\s*%?[\w\.\-]+,\s*%?([\w\.\-]+)")
+
+
+def _line_traffic(rhs: str, symbols: dict[str, str], trips: int = 1) -> int:
+    """HBM traffic estimate for one op: 2x produced bytes (read+write),
+    EXCEPT aliasing/control ops (0) and dynamic-update-slice (2x the
+    update operand — XLA updates the big buffer in place; counting the
+    result would charge a scanned KV cache its full size per layer)."""
+    m = _OPNAME_RE.search(rhs)
+    op = m.group(1) if m else ""
+    if op in _FREE_OPS:
+        return 0
+    if op == "dynamic-update-slice":
+        dm = _DUS_RE.search(rhs)
+        upd_txt = symbols.get(dm.group(1), "") if dm else ""
+        shp, bpe = _first_shape(upd_txt)
+        if shp is None or not bpe:
+            return 0
+        n = 1
+        for d in shp:
+            n *= d
+        return 2 * n * bpe
+    idx = m.start(1) if m else len(rhs)
+    shp, bpe = _first_shape(rhs[:idx])
+    if shp is None or not bpe:
+        return 0
+    n = 1
+    for d in shp:
+        n *= d
+    nbytes = 2 * n * bpe
+    # scan stacking fused with the update: XLA updates the stacked buffer
+    # in place; charge one slice (leading dim = stack axis), not the whole
+    # buffer per iteration.
+    if op == "fusion" and (
+        "dynamic_update_slice" in rhs or "dynamic-update-slice" in rhs
+    ):
+        nbytes //= max(shp[0], 1) if shp else 1
+    elif op in ("fusion", "copy") and shp and shp[0] == trips > 1:
+        # scan-carry stacking: leading dim == loop trip count means this is
+        # the in-place stacked buffer; charge one slice per iteration.
+        nbytes //= shp[0]
+    elif op == "fusion" and shp and len(shp) > 1 and shp[0] > 1:
+        # fused stack update: an operand aliases the full result buffer and
+        # another operand is a leading-dim slice of it -> in-place DUS;
+        # charge the slice, not the stack (the 80-layer remat carry case).
+        ops_txt = rhs.split("(", 1)[1]
+        names = re.findall(r"%([\w\.\-]+)", ops_txt[: ops_txt.find(")")])
+        full_like = slice_bytes = 0
+        for nm in names:
+            oshp, obpe = _first_shape(symbols.get(nm, ""))
+            if oshp is None:
+                continue
+            if oshp == shp:
+                full_like += 1
+            elif (
+                len(oshp) == len(shp)
+                and oshp[0] == 1
+                and oshp[1:] == shp[1:]
+            ):
+                onb = obpe
+                for d in oshp:
+                    onb *= d
+                slice_bytes = max(slice_bytes, onb)
+        if full_like and slice_bytes:
+            nbytes = 2 * slice_bytes
+    return nbytes
+
+
+def top_traffic(hlo: str, k: int = 15) -> list[tuple[float, str]]:
+    """The dry-run 'profile': top-k HBM-traffic lines (trip-weighted GiB),
+    with computation, op and shape — what to stare at before §Perf edits."""
+    comps = split_computations(hlo)
+    mult = _multipliers(comps)
+    symbols: dict[str, str] = {}
+    for body in comps.values():
+        for line in body.splitlines():
+            m = _DEF_RE.match(line)
+            if m:
+                symbols[m.group(1)] = m.group(2)
+    fused_internal: set[str] = set()
+    for body in comps.values():
+        for line in body.splitlines():
+            if re.search(r"\bfusion\(", line):
+                mm = re.search(r"calls=%?([\w\.\-]+)", line)
+                if mm:
+                    fused_internal.add(mm.group(1))
+    rows = []
+    for name, body in comps.items():
+        w = mult.get(name, 0) or (1 if name not in fused_internal else 0)
+        if w == 0 or name in fused_internal:
+            continue
+        for line in body.splitlines():
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            t = _line_traffic(m.group(2), symbols, w) * w
+            if t:
+                meta = re.search(r'op_name="([^"]*)"', m.group(2))
+                tag = meta.group(1)[-70:] if meta else m.group(2)[:70]
+                rows.append((t / 2**30, f"[{name} x{w}] {tag}"))
+    rows.sort(reverse=True)
+    return rows[:k]
+
+
+def collective_bytes(hlo: str) -> dict:
+    """Total collective bytes (trip-count weighted) and per-op breakdown."""
+    comps = split_computations(hlo)
+
+    # call-graph edges with multipliers
+    edges: dict[str, list[tuple[str, int]]] = defaultdict(list)
+    for name, body in comps.items():
+        for m in _WHILE_RE.finditer(body):
+            cond, loop_body = m.group(1), m.group(2)
+            trips = _trip_count(comps.get(cond, ""))
+            edges[name].append((loop_body, trips))
+            edges[name].append((cond, trips))
+        for m in _CALL_RE.finditer(body):
+            edges[name].append((m.group(1), 1))
+
+    # propagate multipliers from ENTRY
+    entry = None
+    for name in comps:
+        if "entry" in name.lower() or name.startswith("main"):
+            entry = name
+            break
+    if entry is None:
+        entry = next(iter(comps))
+    mult: dict[str, int] = defaultdict(int)
+    mult[entry] = 1
+    stack = [entry]
+    seen_edges = set()
+    while stack:
+        cur = stack.pop()
+        for child, k in edges.get(cur, []):
+            key = (cur, child)
+            if key in seen_edges:
+                continue
+            seen_edges.add(key)
+            mult[child] += mult[cur] * k
+            stack.append(child)
+
+    per_op: dict[str, int] = defaultdict(int)
+    counts: dict[str, int] = defaultdict(int)
+    for name, body in comps.items():
+        w = mult.get(name, 1) or 1
+        for line in body.splitlines():
+            ls = line.strip()
+            if "=" not in ls:
+                continue
+            rhs = ls.split("=", 1)[1]
+            for op in COLLECTIVES:
+                # count op-start or plain forms; skip -done (same traffic)
+                m = re.search(rf"\b{op}(?:-start)?\(", rhs)
+                if m and f"{op}-done" not in rhs:
+                    shape_txt = rhs[: m.start()]  # result type incl. tuples
+                    nbytes = _shape_bytes(shape_txt)
+                    per_op[op] += nbytes * w
+                    counts[op] += w
+                    break
+    return {
+        "total_bytes": int(sum(per_op.values())),
+        "per_op_bytes": {k: int(v) for k, v in per_op.items()},
+        "op_counts": {k: int(v) for k, v in counts.items()},
+    }

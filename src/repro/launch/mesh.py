@@ -1,0 +1,28 @@
+"""Production mesh factory.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets the 512-device XLA flag before
+calling it; tests and benches keep their single CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 two-pod (512 chips) mesh.
+
+    Axes: 'pod' = pure data parallelism across pods (param replication,
+    gradient all-reduce over ICI/DCN), 'data' = FSDP + batch sharding,
+    'model' = TP/EP.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Elastic variant: any shape whose axis names are drawn from
+    ('pod', 'data', 'model') restores checkpoints cleanly (DESIGN.md §8)."""
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,59 @@
+"""Logical -> physical sharding glue.
+
+Parameter specs are written against logical axis names ("data", "model");
+the batch is sharded over every pure-DP axis present in the mesh ("pod"
+included when it exists).  Everything resolves against the actual mesh at
+launch time, so the same model code runs on (data, model) and
+(pod, data, model) meshes — and on any reshape of them (elastic restarts).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def batch_axes(mesh: Mesh):
+    """Axes the global batch is sharded over (pod + data when present)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def batch_spec(mesh: Mesh) -> P:
+    return P(batch_axes(mesh))
+
+
+def resolve_spec(spec: P, mesh: Mesh) -> P:
+    """Drop mesh axes that don't exist (e.g. 'pod' on a single-pod mesh)."""
+    names = set(mesh.axis_names)
+
+    def fix(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a in names)
+            return kept if kept else None
+        return entry if entry in names else None
+
+    return P(*(fix(e) for e in spec))
+
+
+def param_sharding(specs, mesh: Mesh):
+    """Spec pytree -> NamedSharding pytree resolved on this mesh."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, resolve_spec(s, mesh)),
+        specs,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+def batch_shardings(batch_tree, mesh: Mesh):
+    """Shard every batch input on its leading (batch) dimension."""
+    bs = NamedSharding(mesh, P(batch_axes(mesh)))
+
+    def one(x):
+        nd = len(x.shape)
+        return NamedSharding(mesh, P(batch_axes(mesh), *(None,) * (nd - 1)))
+
+    return jax.tree.map(one, batch_tree)

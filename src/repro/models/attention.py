@@ -1,0 +1,339 @@
+"""GQA attention: flash-style chunked softmax (pure XLA) + decode path.
+
+``flash_attention`` never materialises the full (S, S) score matrix: an
+outer scan over query chunks and an inner scan over KV chunks carry the
+online-softmax statistics (running max / normaliser), so per-step live
+memory is ``O(q_chunk * kv_chunk)`` — this is what lets the 32k-prefill and
+4k-train cells compile within HBM at dry-run time.  ``causal_skip`` prunes
+KV chunks strictly above the diagonal (per-q-chunk static upper bound) —
+that halving of attention FLOPs is one of the §Perf iterations.
+
+GQA is expressed with a (kv_head, group) einsum layout — KV is never
+``repeat``-ed up to n_heads, so decode reads exactly the cache bytes.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import apply_rope, init_rmsnorm, rmsnorm, truncated_normal
+
+
+def init_gqa(key, d, n_heads, n_kv, head_dim, qkv_bias=False, qk_norm=False):
+    ks = jax.random.split(key, 4)
+    std = 1.0 / math.sqrt(d)
+    p = {
+        "wq": truncated_normal(ks[0], (d, n_heads, head_dim), std),
+        "wk": truncated_normal(ks[1], (d, n_kv, head_dim), std),
+        "wv": truncated_normal(ks[2], (d, n_kv, head_dim), std),
+        "wo": truncated_normal(
+            ks[3], (n_heads, head_dim, d), 1.0 / math.sqrt(n_heads * head_dim)
+        ),
+    }
+    s = {
+        "wq": P("data", "model", None),
+        "wk": P("data", "model", None),
+        "wv": P("data", "model", None),
+        "wo": P("model", None, "data"),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads, head_dim), jnp.float32)
+        p["bk"] = jnp.zeros((n_kv, head_dim), jnp.float32)
+        p["bv"] = jnp.zeros((n_kv, head_dim), jnp.float32)
+        s["bq"] = P("model", None)
+        s["bk"] = P("model", None)
+        s["bv"] = P("model", None)
+    if qk_norm:
+        qp, qs = init_rmsnorm(head_dim)
+        kp, ksp = init_rmsnorm(head_dim)
+        p["q_norm"], p["k_norm"] = qp, kp
+        s["q_norm"], s["k_norm"] = qs, ksp
+    return p, s
+
+
+def qkv_project(params, x, cos, sin, positions, qk_norm=False):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    if "bq" in params:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    if qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    if cos is not None:
+        q = apply_rope(q, cos, sin, positions)
+        k = apply_rope(k, cos, sin, positions)
+    return q, k, v
+
+
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    causal_skip: bool = False,
+):
+    """Chunked online-softmax attention (GQA-native).
+
+    q: (b, sq, h, hd); k, v: (b, skv, n_kv, hd).  Returns (b, sq, h, hd).
+    ``causal_skip=True`` unrolls the outer q loop in Python and statically
+    skips fully-masked KV chunks (the beyond-paper FLOP halving).
+    """
+    b, sq, h, hd = q.shape
+    skv, n_kv = k.shape[1], k.shape[2]
+    hdv = v.shape[3]  # v head dim may differ from qk head dim (MLA)
+    g = h // n_kv
+    scale = 1.0 / math.sqrt(hd)
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    assert sq % q_chunk == 0 and skv % kv_chunk == 0, (sq, skv)
+    nq = sq // q_chunk
+    nkv = skv // kv_chunk
+
+    qr = (q * scale).reshape(b, nq, q_chunk, n_kv, g, hd)
+    kr = k.reshape(b, nkv, kv_chunk, n_kv, hd)
+    vr = v.reshape(b, nkv, kv_chunk, n_kv, hdv)
+    q_pos = jnp.arange(sq, dtype=jnp.int32).reshape(nq, q_chunk)
+    kv_pos = jnp.arange(skv, dtype=jnp.int32).reshape(nkv, kv_chunk)
+
+    def kv_step(carry, inputs):
+        acc, m, l, qi, qp = carry
+        kc, vc, kp = inputs
+        # scores: (b, n_kv, g, q_chunk, kv_chunk)
+        s = jnp.einsum("bqcgd,bkcd->bcgqk", qi, kc).astype(jnp.float32)
+        if causal:
+            mask = qp[None, None, None, :, None] >= kp[None, None, None, None, :]
+            s = jnp.where(mask, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - safe_m[..., None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - safe_m), 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bcgqk,bkcd->bcgqd", p.astype(qi.dtype), vc
+        ).astype(jnp.float32)
+        return (acc_new, m_new, l_new, qi, qp), None
+
+    def one_q_chunk(qi, qp, kv_hi):
+        acc = jnp.zeros((b, n_kv, g, q_chunk, hdv), jnp.float32)
+        m = jnp.full((b, n_kv, g, q_chunk), -jnp.inf, jnp.float32)
+        l = jnp.zeros((b, n_kv, g, q_chunk), jnp.float32)
+        ks_ = kr[:, :kv_hi].swapaxes(0, 1)  # (nkv', b, kc, n_kv, hd)
+        vs_ = vr[:, :kv_hi].swapaxes(0, 1)
+        ps_ = kv_pos[:kv_hi]
+        (acc, m, l, _, _), _ = lax.scan(
+            kv_step, (acc, m, l, qi, qp), (ks_, vs_, ps_)
+        )
+        out = acc / jnp.maximum(l, 1e-37)[..., None]
+        # (b, n_kv, g, qc, hd) -> (b, qc, n_kv, g, hd)
+        return jnp.transpose(out, (0, 3, 1, 2, 4)).astype(q.dtype)
+
+    if causal_skip and causal and nq > 1:
+        outs = []
+        for iq in range(nq):
+            kv_hi = min(nkv, ((iq + 1) * q_chunk + kv_chunk - 1) // kv_chunk)
+            outs.append(one_q_chunk(qr[:, iq], q_pos[iq], kv_hi))
+        out = jnp.stack(outs, axis=1)  # (b, nq, qc, n_kv, g, hd)
+    else:
+
+        def q_step(_, inputs):
+            qi, qp = inputs
+            return None, one_q_chunk(qi, qp, nkv)
+
+        _, outs = lax.scan(q_step, None, (qr.swapaxes(0, 1), q_pos))
+        out = outs.swapaxes(0, 1)  # (b, nq, qc, n_kv, g, hd)
+    return out.reshape(b, sq, h, hdv)
+
+
+def attention_output(params, attn, x_dtype):
+    return jnp.einsum("bshk,hkd->bsd", attn, params["wo"].astype(x_dtype))
+
+
+# ---------------------------------------------------------------------------
+# custom-VJP flash attention: recompute scores in backward (true flash bwd)
+# ---------------------------------------------------------------------------
+#
+# The autodiff backward of the scan-based forward stacks a probability
+# matrix per KV chunk as a scan residual — at train_4k that is the single
+# largest HBM-traffic line in the dry-run profile.  The flash backward
+# stores only (out, m, l) per query and recomputes p chunk-by-chunk.
+
+
+def _flash_fwd_chunked(q, k, v, causal, q_chunk, kv_chunk):
+    """Forward returning (out, m, l); shapes as flash_attention."""
+    b, sq, h, hd = q.shape
+    skv, n_kv = k.shape[1], k.shape[2]
+    hdv = v.shape[3]
+    g = h // n_kv
+    scale = 1.0 / math.sqrt(hd)
+    nq = sq // q_chunk
+    nkv = skv // kv_chunk
+    qr = (q * scale).reshape(b, nq, q_chunk, n_kv, g, hd)
+    kr = k.reshape(b, nkv, kv_chunk, n_kv, hd)
+    vr = v.reshape(b, nkv, kv_chunk, n_kv, hdv)
+    q_pos = jnp.arange(sq, dtype=jnp.int32).reshape(nq, q_chunk)
+    kv_pos = jnp.arange(skv, dtype=jnp.int32).reshape(nkv, kv_chunk)
+
+    def kv_step(carry, inputs):
+        acc, m, l, qi, qp = carry
+        kc, vc, kp = inputs
+        s = jnp.einsum("bqcgd,bkcd->bcgqk", qi, kc).astype(jnp.float32)
+        if causal:
+            mask = qp[None, None, None, :, None] >= kp[None, None, None, None, :]
+            s = jnp.where(mask, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - safe_m[..., None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - safe_m), 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bcgqk,bkcd->bcgqd", p.astype(qi.dtype), vc
+        ).astype(jnp.float32)
+        return (acc_new, m_new, l_new, qi, qp), None
+
+    def q_step(_, inputs):
+        qi, qp = inputs
+        acc = jnp.zeros((b, n_kv, g, q_chunk, hdv), jnp.float32)
+        m = jnp.full((b, n_kv, g, q_chunk), -jnp.inf, jnp.float32)
+        l = jnp.zeros((b, n_kv, g, q_chunk), jnp.float32)
+        (acc, m, l, _, _), _ = lax.scan(
+            kv_step, (acc, m, l, qi, qp),
+            (kr.swapaxes(0, 1), vr.swapaxes(0, 1), kv_pos),
+        )
+        out = acc / jnp.maximum(l, 1e-37)[..., None]
+        return None, (out.astype(q.dtype), m, l)
+
+    _, (outs, ms, ls) = lax.scan(q_step, None, (qr.swapaxes(0, 1), q_pos))
+    # outs: (nq, b, c, g, qc, hdv) -> (b, sq, h, hdv)
+    out = jnp.transpose(outs, (1, 0, 4, 2, 3, 5)).reshape(b, sq, h, hdv)
+    return out, ms, ls  # ms/ls: (nq, b, c, g, qc)
+
+
+def _flash_bwd_chunked(q, k, v, out, ms, ls, dout, causal, q_chunk, kv_chunk):
+    b, sq, h, hd = q.shape
+    skv, n_kv = k.shape[1], k.shape[2]
+    hdv = v.shape[3]
+    g = h // n_kv
+    scale = 1.0 / math.sqrt(hd)
+    nq = sq // q_chunk
+    nkv = skv // kv_chunk
+    qr = q.reshape(b, nq, q_chunk, n_kv, g, hd)
+    kr = k.reshape(b, nkv, kv_chunk, n_kv, hd)
+    vr = v.reshape(b, nkv, kv_chunk, n_kv, hdv)
+    do = dout.reshape(b, nq, q_chunk, n_kv, g, hdv)
+    og = out.reshape(b, nq, q_chunk, n_kv, g, hdv)
+    q_pos = jnp.arange(sq, dtype=jnp.int32).reshape(nq, q_chunk)
+    kv_pos = jnp.arange(skv, dtype=jnp.int32).reshape(nkv, kv_chunk)
+    # delta: rowsum(do * out) per query — (nq, b, c, g, qc)
+    delta = jnp.einsum("bnqcgd,bnqcgd->nbcgq", do.astype(jnp.float32),
+                       og.astype(jnp.float32))
+
+    def q_step(carry, inputs):
+        dk_acc, dv_acc = carry
+        qi, doi, mi, li, di, qp = inputs
+        qs = (qi * scale).astype(q.dtype)
+
+        def kv_step(carry2, inputs2):
+            dq_acc, = carry2
+            kc, vc, kp, dk_c, dv_c = inputs2
+            s = jnp.einsum("bqcgd,bkcd->bcgqk", qs, kc).astype(jnp.float32)
+            if causal:
+                mask = (
+                    qp[None, None, None, :, None]
+                    >= kp[None, None, None, None, :]
+                )
+                s = jnp.where(mask, s, -jnp.inf)
+            safe_m = jnp.where(jnp.isfinite(mi), mi, 0.0)
+            p = jnp.exp(s - safe_m[..., None])
+            p = jnp.where(jnp.isfinite(s), p, 0.0)
+            p = p / jnp.maximum(li, 1e-37)[..., None]  # normalised probs
+            pb = p.astype(q.dtype)
+            dv_new = dv_c + jnp.einsum(
+                "bcgqk,bqcgd->bkcd", pb, doi
+            ).astype(jnp.float32)
+            dp = jnp.einsum("bqcgd,bkcd->bcgqk", doi, vc).astype(jnp.float32)
+            ds = p * (dp - di[..., None])  # (b,c,g,q,k) f32
+            dsb = ds.astype(q.dtype)
+            dq_new = dq_acc + jnp.einsum(
+                "bcgqk,bkcd->bqcgd", dsb, kc
+            ).astype(jnp.float32) * scale
+            # qs already carries the 1/sqrt(d) factor, so no extra scale
+            dk_new = dk_c + jnp.einsum(
+                "bcgqk,bqcgd->bkcd", dsb, qs
+            ).astype(jnp.float32)
+            return (dq_new,), (dk_new, dv_new)
+
+        dq0 = jnp.zeros((b, q_chunk, n_kv, g, hd), jnp.float32)
+        (dq_i,), (dk_steps, dv_steps) = lax.scan(
+            kv_step, (dq0,),
+            (kr.swapaxes(0, 1), vr.swapaxes(0, 1), kv_pos,
+             dk_acc.swapaxes(0, 1), dv_acc.swapaxes(0, 1)),
+        )
+        return (
+            dk_steps.swapaxes(0, 1), dv_steps.swapaxes(0, 1)
+        ), dq_i.astype(q.dtype)
+
+    dk0 = jnp.zeros((b, nkv, kv_chunk, n_kv, hd), jnp.float32)
+    dv0 = jnp.zeros((b, nkv, kv_chunk, n_kv, hdv), jnp.float32)
+    (dk, dv), dqs = lax.scan(
+        q_step, (dk0, dv0),
+        (qr.swapaxes(0, 1), do.swapaxes(0, 1), ms, ls, delta, q_pos),
+    )
+    dq = dqs.swapaxes(0, 1).reshape(b, sq, h, hd)
+    return (
+        dq,
+        dk.reshape(b, skv, n_kv, hd).astype(k.dtype),
+        dv.reshape(b, skv, n_kv, hdv).astype(v.dtype),
+    )
+
+
+def make_flash_attention_vjp(*, causal: bool, q_chunk: int, kv_chunk: int):
+    """flash_attention with the flash backward (recompute, no p residuals)."""
+
+    @jax.custom_vjp
+    def fa(q, k, v):
+        out, _, _ = _flash_fwd_chunked(q, k, v, causal, q_chunk, kv_chunk)
+        return out
+
+    def fwd(q, k, v):
+        out, ms, ls = _flash_fwd_chunked(q, k, v, causal, q_chunk, kv_chunk)
+        return out, (q, k, v, out, ms, ls)
+
+    def bwd(res, dout):
+        q, k, v, out, ms, ls = res
+        return _flash_bwd_chunked(
+            q, k, v, out, ms, ls, dout, causal, q_chunk, kv_chunk
+        )
+
+    fa.defvjp(fwd, bwd)
+    return fa
+
+
+def decode_attention(q, k_cache, v_cache, cache_len):
+    """Single-token decode: q (b, 1, h, hd) vs cache (b, smax, n_kv, hd).
+
+    GQA-native — the cache is read once, never repeated to n_heads.
+    """
+    b, _, h, hd = q.shape
+    smax, n_kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // n_kv
+    qg = (q[:, 0] / math.sqrt(hd)).reshape(b, n_kv, g, hd)
+    s = jnp.einsum("bcgd,bkcd->bcgk", qg, k_cache).astype(jnp.float32)
+    pos = jnp.arange(smax, dtype=jnp.int32)
+    s = jnp.where(pos[None, None, None, :] < cache_len, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bcgk,bkcd->bcgd", p, v_cache)
+    return out.reshape(b, 1, h, hd)

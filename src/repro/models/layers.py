@@ -1,0 +1,158 @@
+"""Shared model building blocks (pure-JAX, functional, dict-of-arrays params).
+
+Every ``init_*`` returns ``(params, specs)`` — a pytree of arrays and a
+matching pytree of logical ``PartitionSpec``s (DESIGN.md §5): TP shards the
+"wide" axis on ``model``, FSDP shards the d_model axis on ``data``; the
+``pod`` axis is pure data parallelism.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = Any  # nested dict of jnp arrays
+Specs = Any  # matching nested dict of PartitionSpec
+
+# Activation batch axes, set by the launcher/dry-run before tracing
+# (("pod","data"), ("data",), or () for batch-1 decode).  None disables
+# activation constraints (single-device tests).  XLA's sharding propagation
+# loses the batch sharding through the embedding gather, so the residual
+# stream is re-constrained at every layer boundary — without this the scan
+# remat carries are stored *replicated* (~100 GiB/device at train_4k).
+_BATCH_AXES: tuple | None = None
+
+
+def set_batch_axes(ba):
+    global _BATCH_AXES
+    _BATCH_AXES = ba
+
+
+def get_batch_axes():
+    return _BATCH_AXES
+
+
+def constrain_batch_leading(x):
+    """Shard dim0 over the configured batch axes (residual streams etc.)."""
+    if _BATCH_AXES is None:
+        return x
+    spec = P(_BATCH_AXES, *(None,) * (x.ndim - 1))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_spec(x, *entries):
+    """Explicit activation constraint (no-op outside a mesh context)."""
+    if _BATCH_AXES is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*entries))
+
+
+def truncated_normal(key, shape, std, dtype=jnp.float32):
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+# -- normalisation -----------------------------------------------------------
+
+
+def init_rmsnorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}, {"scale": P(None)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(x.dtype)
+
+
+# -- embeddings --------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d: int):
+    p = {"table": truncated_normal(key, (vocab, d), 0.02)}
+    s = {"table": P("model", "data")}  # vocab TP-sharded, d FSDP-sharded
+    return p, s
+
+
+def embed(params, tokens, dtype=jnp.bfloat16):
+    return params["table"].astype(dtype)[tokens]
+
+
+def unembed(params, x):
+    """Project activations to vocab logits (tied or untied table)."""
+    return jnp.einsum("bsd,vd->bsv", x, params["table"].astype(x.dtype))
+
+
+# -- MLP ---------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, ff: int, kind: str = "swiglu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    std_in = 1.0 / math.sqrt(d)
+    std_out = 1.0 / math.sqrt(ff)
+    if kind == "swiglu":
+        p = {
+            "w_gate": truncated_normal(k1, (d, ff), std_in),
+            "w_up": truncated_normal(k2, (d, ff), std_in),
+            "w_down": truncated_normal(k3, (ff, d), std_out),
+        }
+        s = {
+            "w_gate": P("data", "model"),
+            "w_up": P("data", "model"),
+            "w_down": P("model", "data"),
+        }
+    else:  # gelu
+        p = {
+            "w_up": truncated_normal(k1, (d, ff), std_in),
+            "w_down": truncated_normal(k2, (ff, d), std_out),
+        }
+        s = {"w_up": P("data", "model"), "w_down": P("model", "data")}
+    return p, s
+
+
+def mlp(params, x, kind: str = "swiglu"):
+    dt = x.dtype
+    if kind == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(dt))
+        u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(dt))
+        h = jax.nn.silu(g) * u
+    else:
+        u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(dt))
+        h = jax.nn.gelu(u)
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(dt))
+
+
+# -- rotary embeddings -------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, max_pos: int, theta: float = 1e4):
+    inv = 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+    t = jnp.arange(max_pos, dtype=jnp.float32)
+    freqs = jnp.outer(t, inv)  # (max_pos, head_dim/2)
+    return jnp.cos(freqs), jnp.sin(freqs)
+
+
+def apply_rope(x, cos, sin, positions):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    c = cos[positions][..., None, :]  # (..., seq, 1, hd/2)
+    s = sin[positions][..., None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate(
+        [x1 * c - x2 * s, x2 * c + x1 * s], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int, dtype=jnp.bfloat16):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / (1e4 ** (dim / d))
+    pe = jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+    return pe.astype(dtype)

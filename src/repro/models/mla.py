@@ -1,0 +1,137 @@
+"""Multi-head Latent Attention (DeepSeek-V3).
+
+Train/prefill: decompress the latent ``c_kv`` into per-head K/V and run the
+flash attention path (qk dim = nope+rope, v dim = v_head_dim).
+
+Decode: the *absorbed* form — W_uk is folded into the query and W_uv into
+the output, so attention runs directly against the compressed cache
+``(kv_lora_rank + rope_dim)`` per token.  This is what makes the
+``decode_32k`` cell's cache 576 B/token instead of 64 KiB/token and it is
+the memory-roofline headline for the deepseek-v3 cells.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.attention import flash_attention
+from repro.models.layers import apply_rope, rmsnorm, truncated_normal
+
+
+def init_mla(key, d, n_heads, *, q_lora_rank, kv_lora_rank,
+             qk_nope_head_dim, qk_rope_head_dim, v_head_dim):
+    ks = jax.random.split(key, 8)
+    qk_head_dim = qk_nope_head_dim + qk_rope_head_dim
+    std_d = 1.0 / math.sqrt(d)
+    p = {
+        "w_dq": truncated_normal(ks[0], (d, q_lora_rank), std_d),
+        "q_norm": jnp.ones((q_lora_rank,), jnp.float32),
+        "w_uq": truncated_normal(
+            ks[1], (q_lora_rank, n_heads, qk_head_dim),
+            1.0 / math.sqrt(q_lora_rank),
+        ),
+        "w_dkv": truncated_normal(ks[2], (d, kv_lora_rank), std_d),
+        "kv_norm": jnp.ones((kv_lora_rank,), jnp.float32),
+        "w_krope": truncated_normal(ks[3], (d, qk_rope_head_dim), std_d),
+        "w_uk": truncated_normal(
+            ks[4], (kv_lora_rank, n_heads, qk_nope_head_dim),
+            1.0 / math.sqrt(kv_lora_rank),
+        ),
+        "w_uv": truncated_normal(
+            ks[5], (kv_lora_rank, n_heads, v_head_dim),
+            1.0 / math.sqrt(kv_lora_rank),
+        ),
+        "wo": truncated_normal(
+            ks[6], (n_heads, v_head_dim, d),
+            1.0 / math.sqrt(n_heads * v_head_dim),
+        ),
+    }
+    s = {
+        "w_dq": P("data", "model"),
+        "q_norm": P(None),
+        "w_uq": P(None, "model", None),
+        "w_dkv": P("data", None),
+        "kv_norm": P(None),
+        "w_krope": P("data", None),
+        "w_uk": P(None, "model", None),
+        "w_uv": P(None, "model", None),
+        "wo": P("model", None, "data"),
+    }
+    return p, s
+
+
+def mla_latents(params, x, cos, sin, positions, dims):
+    """Shared front half: queries + compressed KV latent + rope key.
+
+    Returns q_nope (b,s,h,dn), q_rope (b,s,h,dr), c_kv (b,s,r), k_rope
+    (b,s,dr) — ``c_kv``/``k_rope`` are exactly what the decode cache stores.
+    """
+    dt = x.dtype
+    cq = jnp.einsum("bsd,dr->bsr", x, params["w_dq"].astype(dt))
+    cq = rmsnorm({"scale": params["q_norm"]}, cq)
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["w_uq"].astype(dt))
+    dn, dr = dims["qk_nope_head_dim"], dims["qk_rope_head_dim"]
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, cos, sin, positions)
+
+    c_kv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"].astype(dt))
+    c_kv = rmsnorm({"scale": params["kv_norm"]}, c_kv)
+    k_rope = jnp.einsum("bsd,dk->bsk", x, params["w_krope"].astype(dt))
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin, positions)[:, :, 0]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_attention_train(params, x, cos, sin, positions, dims, *,
+                        q_chunk=1024, kv_chunk=1024, causal_skip=False):
+    """Prefill/train path: decompress K/V, flash attention, output proj."""
+    dt = x.dtype
+    b, s, _ = x.shape
+    q_nope, q_rope, c_kv, k_rope = mla_latents(
+        params, x, cos, sin, positions, dims
+    )
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uk"].astype(dt))
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uv"].astype(dt))
+    h = q_nope.shape[2]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, k_rope.shape[-1]))],
+        axis=-1,
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    attn = flash_attention(
+        q, k, v, causal=True, q_chunk=q_chunk, kv_chunk=kv_chunk,
+        causal_skip=causal_skip,
+    )
+    return jnp.einsum("bshk,hkd->bsd", attn, params["wo"].astype(dt))
+
+
+def mla_attention_decode(params, x, cos, sin, positions, dims,
+                         ckv_cache, krope_cache, cache_len):
+    """Absorbed decode: attention against the compressed cache.
+
+    x: (b, 1, d).  ckv_cache: (b, smax, r); krope_cache: (b, smax, dr).
+    Returns (out (b,1,d), new_ckv (b,1,r), new_krope (b,1,dr)).
+    """
+    dt = x.dtype
+    q_nope, q_rope, c_kv, k_rope = mla_latents(
+        params, x, cos, sin, positions, dims
+    )
+    # absorb W_uk into the query: (b,1,h,dn) x (r,h,dn) -> (b,1,h,r)
+    q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, params["w_uk"].astype(dt))
+    qk_dim = dims["qk_nope_head_dim"] + dims["qk_rope_head_dim"]
+    scale = 1.0 / math.sqrt(qk_dim)
+    s_lat = jnp.einsum("bshr,bkr->bshk", q_abs, ckv_cache)
+    s_rope = jnp.einsum("bshd,bkd->bshk", q_rope, krope_cache)
+    scores = (s_lat + s_rope).astype(jnp.float32) * scale  # (b,1,h,smax)
+    smax = ckv_cache.shape[1]
+    pos = jnp.arange(smax, dtype=jnp.int32)
+    scores = jnp.where(pos[None, None, None, :] < cache_len, scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1).astype(dt)
+    ctx = jnp.einsum("bshk,bkr->bshr", p, ckv_cache)  # (b,1,h,r)
+    # absorb W_uv on the way out: (b,1,h,r) x (r,h,dv) -> (b,1,h,dv)
+    out_h = jnp.einsum("bshr,rhk->bshk", ctx, params["w_uv"].astype(dt))
+    out = jnp.einsum("bshk,hkd->bsd", out_h, params["wo"].astype(dt))
+    return out, c_kv, k_rope

@@ -1,0 +1,237 @@
+"""Mixture-of-Experts with *stable-sort* token dispatch (the paper inside
+the framework).
+
+Dispatch = sort the flat (token, expert-choice) assignment list by expert
+id with the co-rank merge sort.  Stability is load-bearing three ways:
+
+1. **Determinism** — equal expert ids keep token order, so training is
+   bitwise reproducible across restarts and compilations (a lexicographic
+   (expert, token) key would need 64-bit keys; the paper's merge gives the
+   same order on 32-bit keys for free).
+2. **Fair capacity truncation** — tokens beyond expert capacity are dropped
+   *latest-first* (positional order preserved by stability), which is the
+   well-defined semantics checked in tests.
+3. **Balanced exchange** — the per-expert segments the sort produces are
+   contiguous; under expert parallelism the all_to_all slot for each expert
+   is exactly its capacity (static shape), the TPU analogue of the paper's
+   equal-bytes-per-peer guarantee.
+
+The router supports softmax (DBRX) and sigmoid+bias aux-free scoring
+(DeepSeek-V3), plus optional shared experts (V3's 1 shared expert).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import truncated_normal
+
+
+def init_moe(
+    key,
+    d: int,
+    ff: int,
+    n_experts: int,
+    n_shared: int = 0,
+    shared_ff: int | None = None,
+):
+    ks = jax.random.split(key, 5)
+    std_in = 1.0 / math.sqrt(d)
+    std_out = 1.0 / math.sqrt(ff)
+    p = {
+        "router": truncated_normal(ks[0], (d, n_experts), std_in),
+        "w_gate": truncated_normal(ks[1], (n_experts, d, ff), std_in),
+        "w_up": truncated_normal(ks[2], (n_experts, d, ff), std_in),
+        "w_down": truncated_normal(ks[3], (n_experts, ff, d), std_out),
+    }
+    s = {
+        "router": P("data", None),
+        "w_gate": P("model", "data", None),  # experts EP-sharded on model
+        "w_up": P("model", "data", None),
+        "w_down": P("model", None, "data"),
+    }
+    if n_shared:
+        sff = shared_ff or ff * n_shared
+        from repro.models.layers import init_mlp
+
+        sp, ss = init_mlp(ks[4], d, sff, kind="swiglu")
+        p["shared"], s["shared"] = sp, ss
+    return p, s
+
+
+def _stable_sort_key_val(keys, vals, *, use_merge_sort: bool):
+    if use_merge_sort:
+        from repro.core.mergesort import sort_key_val
+
+        return sort_key_val(keys, vals)
+    order = jnp.argsort(keys, stable=True)
+    return keys[order], vals[order]
+
+
+def route_topk(router_logits, k: int, *, scoring: str = "softmax",
+               router_bias=None):
+    """Per-token top-k experts + combine weights.
+
+    scoring='softmax' (DBRX): weights = softmax over chosen k.
+    scoring='sigmoid' (DeepSeek-V3 aux-free): scores = sigmoid(logits) +
+    bias for *selection* only; weights = normalised sigmoid scores.
+    """
+    if scoring == "sigmoid":
+        scores = jax.nn.sigmoid(router_logits.astype(jnp.float32))
+        select = scores + (router_bias if router_bias is not None else 0.0)
+        _, experts = jax.lax.top_k(select, k)
+        w = jnp.take_along_axis(scores, experts, axis=-1)
+        w = w / (jnp.sum(w, axis=-1, keepdims=True) + 1e-20)
+    else:
+        scores = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+        w, experts = jax.lax.top_k(scores, k)
+        w = w / (jnp.sum(w, axis=-1, keepdims=True) + 1e-20)
+    return w, experts
+
+
+def moe_dispatch(experts, n_experts: int, capacity: int,
+                 *, use_merge_sort: bool = True):
+    """Stable-sort dispatch plan.
+
+    experts: (T, k) int32 expert choice per token-slot.  Returns
+    (slot_token, slot_choice, slot_pos, keep): for each sorted assignment,
+    its source token, which of its k choices it was, its position within
+    the expert's segment, and whether it fits under ``capacity``.
+    Sorted segments are contiguous per expert (ascending), token order
+    preserved inside each segment — stability does the bookkeeping.
+    """
+    t, k = experts.shape
+    flat_e = experts.reshape(-1)  # (T*k,) expert ids; index = token*k+choice
+    idx = jnp.arange(t * k, dtype=jnp.int32)
+    sorted_e, sorted_idx = _stable_sort_key_val(
+        flat_e, idx, use_merge_sort=use_merge_sort
+    )
+    # position within expert segment: rank - first-rank-of-this-expert
+    seg_start = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    slot_pos = (jnp.arange(t * k, dtype=jnp.int32) - seg_start.astype(jnp.int32))
+    keep = slot_pos < capacity
+    slot_token = sorted_idx // k
+    slot_choice = sorted_idx % k
+    return sorted_e, slot_token, slot_choice, slot_pos, keep
+
+
+def _dispatch_combine_one_group(xt, w, experts, n_experts, top_k, capacity,
+                                use_merge_sort):
+    """Dispatch tokens of one group into (E, C, d) slots and return
+    (ex_in, combine_fn).  Stable sort gives expert-contiguous segments and
+    positional (earliest-kept) capacity truncation."""
+    t, d = xt.shape
+    sorted_e, slot_token, slot_choice, slot_pos, keep = moe_dispatch(
+        experts, n_experts, capacity, use_merge_sort=use_merge_sort
+    )
+    flat_slot = sorted_e.astype(jnp.int32) * capacity + slot_pos
+    flat_slot = jnp.where(keep, flat_slot, n_experts * capacity)  # OOB drop
+    ex_in = jnp.zeros((n_experts * capacity, d), xt.dtype)
+    ex_in = ex_in.at[flat_slot].set(xt[slot_token], mode="drop")
+    ex_in = ex_in.reshape(n_experts, capacity, d)
+
+    def combine(ex_out):
+        flat_out = ex_out.reshape(n_experts * capacity, d)
+        token_w = w.reshape(-1)[slot_token * top_k + slot_choice]
+        contrib = jnp.where(
+            keep[:, None],
+            flat_out[jnp.clip(flat_slot, 0, n_experts * capacity - 1)]
+            * token_w[:, None].astype(xt.dtype),
+            0.0,
+        )
+        return jnp.zeros((t, d), xt.dtype).at[slot_token].add(contrib)
+
+    return ex_in, combine
+
+
+def moe_apply(params, x, *, n_experts: int, top_k: int, capacity_factor: float,
+              scoring: str = "softmax", use_merge_sort: bool = True,
+              dispatch_groups: int = 1, dtype=jnp.bfloat16):
+    """Full MoE layer on (b, s, d) activations.
+
+    ``dispatch_groups > 1`` is GShard-style local dispatch: tokens are
+    split into G groups (sized to the data-parallel shards), each group
+    sorts and fills a *local* capacity slice, so the dispatch scatter is
+    shard-local and the only cross-device movement is the (group <-> expert)
+    all_to_all that EP requires anyway.  Capacity is per group.
+    """
+    from repro.models import layers as L
+
+    b, s, d = x.shape
+    t = b * s
+    g = max(1, min(dispatch_groups, t))
+    while t % g:
+        g -= 1
+    xt = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xt, params["router"].astype(x.dtype))
+    w, experts = route_topk(logits, top_k, scoring=scoring)
+
+    tg = t // g
+    capacity = int(math.ceil(tg * top_k / n_experts * capacity_factor))
+    capacity = max(capacity, top_k)
+
+    if g == 1:
+        ex_in, combine = _dispatch_combine_one_group(
+            xt, w, experts, n_experts, top_k, capacity, use_merge_sort
+        )
+        gate = jnp.einsum("ecd,edf->ecf", ex_in, params["w_gate"].astype(x.dtype))
+        up = jnp.einsum("ecd,edf->ecf", ex_in, params["w_up"].astype(x.dtype))
+        h = jax.nn.silu(gate) * up
+        ex_out = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(x.dtype))
+        out = combine(ex_out)
+    else:
+        xg = xt.reshape(g, tg, d)
+        wg = w.reshape(g, tg, top_k)
+        eg = experts.reshape(g, tg, top_k)
+
+        ex_in = jax.vmap(
+            lambda a, b_, c: _dispatch_combine_one_group(
+                a, b_, c, n_experts, top_k, capacity, use_merge_sort
+            )[0]
+        )(xg, wg, eg)  # (G, E, Cg, d)
+        # group dim lives on the batch axes; expert dim on the EP axis —
+        # this transpose IS the all_to_all.
+        ba = L.get_batch_axes()
+        if ba is not None:
+            ex_in = L.constrain_spec(ex_in, ba, None, None, None)
+        ex_g = jnp.swapaxes(ex_in, 0, 1)  # (E, G, Cg, d)
+        if ba is not None:
+            ex_g = L.constrain_spec(ex_g, "model", ba, None, None)
+        gate = jnp.einsum("egcd,edf->egcf", ex_g, params["w_gate"].astype(x.dtype))
+        up = jnp.einsum("egcd,edf->egcf", ex_g, params["w_up"].astype(x.dtype))
+        h = jax.nn.silu(gate) * up
+        ex_out = jnp.einsum("egcf,efd->egcd", h, params["w_down"].astype(x.dtype))
+        if ba is not None:
+            ex_out = L.constrain_spec(ex_out, "model", ba, None, None)
+        ex_out = jnp.swapaxes(ex_out, 0, 1)  # (G, E, Cg, d)
+        if ba is not None:
+            ex_out = L.constrain_spec(ex_out, ba, None, None, None)
+
+        # re-run dispatch bookkeeping per group to combine (cheap ints)
+        def one_combine(xt_g, w_g, e_g, exo_g):
+            _, combine = _dispatch_combine_one_group(
+                xt_g, w_g, e_g, n_experts, top_k, capacity, use_merge_sort
+            )
+            return combine(exo_g)
+
+        out = jax.vmap(one_combine)(xg, wg, eg, ex_out).reshape(t, d)
+
+    if "shared" in params:
+        from repro.models.layers import mlp
+
+        out = out + mlp(params["shared"], x, kind="swiglu").reshape(t, d)
+    return out.reshape(b, s, d)
+
+
+def load_balance_loss(router_logits, experts, n_experts: int):
+    """Switch-style auxiliary load-balance loss (off for sigmoid/aux-free)."""
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    me = jnp.mean(probs, axis=0)
+    one_hot = jax.nn.one_hot(experts[:, 0], n_experts)
+    ce = jnp.mean(one_hot, axis=0)
+    return n_experts * jnp.sum(me * ce)

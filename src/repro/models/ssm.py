@@ -1,0 +1,213 @@
+"""Mamba2 (SSD — state-space duality) block, chunked-scan formulation.
+
+Training/prefill uses the block-decomposition from the Mamba2 paper: the
+sequence is cut into chunks of length L; within a chunk the SSD dual form
+is an (L x L) masked attention-like product, across chunks a ``lax.scan``
+carries the (heads, head_dim, d_state) state.  Decode is the O(1) SSM
+recurrence on a carried state (no KV cache — this is why the ``long_500k``
+cell is *runnable* for SSM/hybrid archs and skipped for full attention).
+
+The merge technique does not apply inside the recurrence (attention-free);
+noted in DESIGN.md §6 — the arch still uses it for sampling and data
+pipeline, and everything here is shardable on (data: batch, model: heads).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import truncated_normal
+
+
+def init_mamba2(key, d: int, *, expand: int = 2, headdim: int = 64,
+                d_state: int = 128, ngroups: int = 1, d_conv: int = 4):
+    d_inner = expand * d
+    nheads = d_inner // headdim
+    conv_dim = d_inner + 2 * ngroups * d_state
+    ks = jax.random.split(key, 6)
+    std = 1.0 / math.sqrt(d)
+    p = {
+        # fused input projection: [x, z, B, C, dt]
+        "w_in": truncated_normal(
+            ks[0], (d, d_inner * 2 + 2 * ngroups * d_state + nheads), std
+        ),
+        "conv_w": truncated_normal(ks[1], (d_conv, conv_dim), 0.1),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, nheads, dtype=jnp.float32)
+        ),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.log(
+            jnp.expm1(
+                jnp.exp(
+                    jax.random.uniform(
+                        ks[2], (nheads,), jnp.float32,
+                        math.log(1e-3), math.log(1e-1),
+                    )
+                )
+            )
+        ),
+        "norm_scale": jnp.ones((d_inner,), jnp.float32),
+        "w_out": truncated_normal(ks[3], (d_inner, d), 1.0 / math.sqrt(d_inner)),
+    }
+    s = {
+        "w_in": P("data", "model"),
+        "conv_w": P(None, "model"),
+        "conv_b": P("model"),
+        "A_log": P("model"),
+        "D": P("model"),
+        "dt_bias": P("model"),
+        "norm_scale": P("model"),
+        "w_out": P("model", "data"),
+    }
+    meta = dict(
+        d_inner=d_inner, nheads=nheads, d_state=d_state, ngroups=ngroups,
+        d_conv=d_conv, headdim=headdim, conv_dim=conv_dim,
+    )
+    return p, s, meta
+
+
+def _split_in(proj, meta):
+    d_inner, gs, nheads = (
+        meta["d_inner"],
+        meta["ngroups"] * meta["d_state"],
+        meta["nheads"],
+    )
+    x = proj[..., :d_inner]
+    z = proj[..., d_inner : 2 * d_inner]
+    b = proj[..., 2 * d_inner : 2 * d_inner + gs]
+    c = proj[..., 2 * d_inner + gs : 2 * d_inner + 2 * gs]
+    dt = proj[..., 2 * d_inner + 2 * gs :]
+    return x, z, b, c, dt
+
+
+def _causal_conv(x, w, bias, state=None):
+    """Depthwise causal conv along seq.  x: (b, s, ch), w: (k, ch).
+
+    With ``state`` (b, k-1, ch) the conv continues from a decode state;
+    returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(k)
+    )
+    y = y + bias.astype(x.dtype)
+    new_state = xp[:, -(k - 1) :, :]
+    return jax.nn.silu(y), new_state
+
+
+def _gated_rmsnorm(x, z, scale, eps=1e-6):
+    x = x * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def ssd_chunked(x, dt, b, c, a_log, d_skip, meta, *, chunk: int = 128,
+                h0=None):
+    """SSD forward.  x: (bt, s, h, p); dt: (bt, s, h); b/c: (bt, s, g, n).
+
+    Returns (y, h_last).  ``h0`` (bt, h, p, n) continues from a state.
+    All per-chunk work (the L x L masked-decay product) lives inside the
+    chunk scan so live memory is O(L^2) per head, not O(S*L).
+    """
+    bt, s, h, pdim = x.shape
+    g, n = b.shape[2], b.shape[3]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    hg = h // g  # heads per B/C group
+    a = -jnp.exp(a_log.astype(jnp.float32))  # (h,) negative decay rates
+    tri = jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :]
+
+    # scan-major chunk layout
+    xr = x.reshape(bt, nc, chunk, h, pdim).swapaxes(0, 1)
+    dtr = dt.reshape(bt, nc, chunk, h).astype(jnp.float32).swapaxes(0, 1)
+    br = b.reshape(bt, nc, chunk, g, n).swapaxes(0, 1)
+    cr = c.reshape(bt, nc, chunk, g, n).swapaxes(0, 1)
+
+    if h0 is None:
+        h0 = jnp.zeros((bt, h, pdim, n), jnp.float32)
+    h0g = h0.reshape(bt, g, hg, pdim, n)
+
+    def body(hprev, inp):
+        xc, dtc, bc, cc = inp
+        xc = xc.astype(jnp.float32)
+        bc = bc.astype(jnp.float32)
+        cc = cc.astype(jnp.float32)
+        l = dtc * a  # (bt, L, h) log decays
+        cs = jnp.cumsum(l, axis=1)  # inclusive within-chunk cumulative
+        # intra-chunk masked decay: exp(cs[t]-cs[tau]) for t >= tau
+        seg = cs[:, :, None, :] - cs[:, None, :, :]  # (bt,L,L,h)
+        m = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+        mh = m.transpose(0, 3, 1, 2).reshape(bt, g, hg, chunk, chunk)
+        scores = jnp.einsum("blgn,bmgn->bglm", cc, bc)
+        scores = scores.reshape(bt, g, 1, chunk, chunk)
+        dtx = xc * dtc[..., None]  # (bt,L,h,p)
+        dtxg = dtx.reshape(bt, chunk, g, hg, pdim)
+        y_intra = jnp.einsum("bghlm,bmghp->blghp", scores * mh, dtxg)
+        # inter-chunk: contribution of the carried state
+        decay_in = jnp.exp(cs).reshape(bt, chunk, g, hg)
+        y_inter = jnp.einsum("blgn,bghpn,blgh->blghp", cc, hprev, decay_in)
+        # state update
+        decay_tail = jnp.exp(cs[:, -1:, :] - cs).reshape(bt, chunk, g, hg)
+        hc = jnp.einsum("blgn,blghp,blgh->bghpn", bc, dtxg, decay_tail)
+        chunk_decay = jnp.exp(cs[:, -1, :]).reshape(bt, g, hg)
+        hnew = hprev * chunk_decay[..., None, None] + hc
+        y = (y_intra + y_inter).reshape(bt, chunk, h, pdim)
+        return hnew, y.astype(x.dtype)
+
+    h_last, ys = lax.scan(body, h0g, (xr, dtr, br, cr))
+    y = ys.swapaxes(0, 1).reshape(bt, s, h, pdim)
+    y = y + (
+        d_skip.astype(jnp.float32)[None, None, :, None]
+        * x.astype(jnp.float32)
+    ).astype(x.dtype)
+    return y, h_last.reshape(bt, h, pdim, n)
+
+
+def mamba2_forward(params, meta, x, *, chunk: int = 128, state=None):
+    """Full Mamba2 block.  x: (b, s, d).  state = (conv_state, ssm_state)
+    for decode continuation (None for training/prefill)."""
+    bt, s, d = x.shape
+    proj = jnp.einsum("bsd,de->bse", x, params["w_in"].astype(x.dtype))
+    xs, z, b, c, dt = _split_in(proj, meta)
+    conv_in = jnp.concatenate([xs, b, c], axis=-1)
+    conv_state = None if state is None else state[0]
+    conv_out, new_conv_state = _causal_conv(
+        conv_in, params["conv_w"], params["conv_b"], conv_state
+    )
+    d_inner, gs = meta["d_inner"], meta["ngroups"] * meta["d_state"]
+    xs = conv_out[..., :d_inner]
+    b = conv_out[..., d_inner : d_inner + gs]
+    c = conv_out[..., d_inner + gs :]
+
+    h, pdim = meta["nheads"], meta["headdim"]
+    g, n = meta["ngroups"], meta["d_state"]
+    xh = xs.reshape(bt, s, h, pdim)
+    bg = b.reshape(bt, s, g, n)
+    cg = c.reshape(bt, s, g, n)
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + params["dt_bias"]
+    )  # (bt, s, h)
+
+    ssm_state = None if state is None else state[1]
+    y, h_last = ssd_chunked(
+        xh, dt, bg, cg, params["A_log"], params["D"], meta,
+        chunk=chunk, h0=ssm_state,
+    )
+    y = y.reshape(bt, s, d_inner)
+    y = _gated_rmsnorm(y, z, params["norm_scale"])
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(x.dtype))
+    if state is None:
+        return out, None
+    return out, (new_conv_state, h_last)

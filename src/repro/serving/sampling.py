@@ -1,0 +1,54 @@
+"""Sampling on merge-sorted logits — the serving-side use of the paper.
+
+top-k uses the merge-based tournament top-k; top-p (nucleus) sorts the
+kept logits with the stable merge sort, so equal logits resolve toward the
+lower token id — deterministic tie-breaking across compilations, which
+lexicographic float sorts do not guarantee.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mergesort import sort_key_val
+from repro.core.topk import merge_topk
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def sample_topk(key, logits, k: int = 50, temperature: float = 1.0):
+    """logits: (b, vocab) -> token ids (b,) sampled from the top-k set."""
+
+    def one(key_i, row):
+        vals, idx = merge_topk(row, k)
+        probs = jax.nn.softmax(vals.astype(jnp.float32) / temperature)
+        choice = jax.random.categorical(key_i, jnp.log(probs + 1e-20))
+        return idx[choice]
+
+    keys = jax.random.split(key, logits.shape[0])
+    return jax.vmap(one)(keys, logits)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def sample_topp(key, logits, p: float = 0.9, k: int = 256,
+                temperature: float = 1.0):
+    """Nucleus sampling over merge-sorted top-k candidates."""
+
+    def one(key_i, row):
+        vals, idx = merge_topk(row, k)  # descending, stable
+        probs = jax.nn.softmax(vals.astype(jnp.float32) / temperature)
+        cum = jnp.cumsum(probs)
+        keep = cum - probs < p  # first token always kept
+        probs = jnp.where(keep, probs, 0.0)
+        choice = jax.random.categorical(key_i, jnp.log(probs + 1e-20))
+        return idx[choice]
+
+    keys = jax.random.split(key, logits.shape[0])
+    return jax.vmap(one)(keys, logits)
+
+
+@jax.jit
+def sample_greedy(logits):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)

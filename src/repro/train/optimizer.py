@@ -1,0 +1,86 @@
+"""AdamW + schedules in pure JAX (no optax dependency).
+
+Moment dtype is configurable (``ModelConfig.adam_dtype``): the 671B config
+uses bf16 moments (as DeepSeek-V3 did) to stay inside HBM at 512 chips;
+everything else uses fp32.  Update math is always fp32.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def adamw_init(params, *, dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, dtype)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    *,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+):
+    """One AdamW step with global-norm clipping.  ``lr`` may be traced."""
+    gsq = sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads)
+    )
+    gnorm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mhat = m_new / c1
+        vhat = v_new / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(
+            jnp.float32
+        )
+        p_new = p.astype(jnp.float32) - lr * delta
+        return (
+            p_new.astype(p.dtype),
+            m_new.astype(m.dtype),
+            v_new.astype(v.dtype),
+        )
+
+    out = jax.tree.map(upd, grads, state.m, state.v, params)
+    p_new = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    m_new = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    v_new = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return p_new, AdamWState(step=step, m=m_new, v=v_new), gnorm
+
+
+def cosine_schedule(step, *, peak_lr, warmup: int, total: int,
+                    floor_frac: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = peak_lr * s / max(warmup, 1)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (
+        floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(math.pi * prog))
+    )
+    return jnp.where(s < warmup, warm, cos)

@@ -1,0 +1,71 @@
+"""Train step builder: grad accumulation, mixed precision, AdamW, donation.
+
+``build_train_step(cfg)`` returns a function
+``(params, opt_state, batch, step) -> (params, opt_state, metrics)`` that
+the launcher jits with in/out shardings from the spec trees.  Gradient
+accumulation is a ``lax.scan`` over microbatches (activation memory /
+``grad_accum``); gradients are accumulated in fp32.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import train_loss
+from repro.train.optimizer import adamw_update, cosine_schedule
+
+
+def build_train_step(cfg: ModelConfig, *, total_steps: int = 10_000,
+                     warmup: int = 200):
+    accum = max(cfg.grad_accum, 1)
+
+    def loss_fn(params, batch):
+        return train_loss(cfg, params, batch)
+
+    def train_step(params, opt_state, batch, step):
+        if accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            # split the global batch into `accum` microbatches along dim 0
+            def micro(tree, i):
+                def slice_one(x):
+                    mb = x.shape[0] // accum
+                    return lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+                return jax.tree.map(slice_one, tree)
+
+            def acc_step(carry, i):
+                loss_acc, grad_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, micro(batch, i))
+                g32 = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), grad_acc, g
+                )
+                return (loss_acc + l, g32), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss, grads), _ = lax.scan(
+                acc_step, (jnp.float32(0), zero),
+                jnp.arange(accum, dtype=jnp.int32),
+            )
+            loss = loss / accum
+            grads = jax.tree.map(lambda g: g / accum, grads)
+
+        lr = cosine_schedule(
+            step, peak_lr=cfg.learning_rate, warmup=warmup, total=total_steps
+        )
+        params, opt_state, gnorm = adamw_update(
+            grads, opt_state, params,
+            lr=lr, weight_decay=cfg.weight_decay,
+        )
+        metrics = {"loss": loss, "gnorm": gnorm, "lr": lr}
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,106 @@
+"""Unit + property tests for the co-rank algorithm (paper Algorithm 1)."""
+
+import math
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import co_rank, co_rank_batch
+
+
+def lemma_conditions_hold(a, b, i, j, k):
+    """Check Lemma 1's two conditions directly."""
+    m, n = len(a), len(b)
+    if j + k != i:
+        return False
+    c1 = (j == 0) or (k >= n) or (a[j - 1] <= b[k])
+    c2 = (k == 0) or (j >= m) or (b[k - 1] < a[j])
+    return bool(c1 and c2)
+
+
+def oracle_corank(a, b, i):
+    """Reference co-rank: simulate a stable merge and count sources."""
+    m, n = len(a), len(b)
+    j = k = 0
+    while j + k < i:
+        if j < m and (k >= n or a[j] <= b[k]):
+            j += 1
+        else:
+            k += 1
+    return j, k
+
+
+def _as_np(x):
+    return np.asarray(x)
+
+
+@pytest.mark.parametrize("m,n", [(8, 8), (5, 13), (1, 64), (64, 1), (17, 3)])
+def test_corank_matches_oracle_exhaustive(m, n):
+    rng = np.random.default_rng(0)
+    a = np.sort(rng.integers(0, 10, size=m)).astype(np.int32)
+    b = np.sort(rng.integers(0, 10, size=n)).astype(np.int32)
+    for i in range(m + n + 1):
+        res = co_rank(i, jnp.asarray(a), jnp.asarray(b))
+        j, k = int(res.j), int(res.k)
+        assert (j, k) == oracle_corank(a, b, i), (m, n, i)
+        assert lemma_conditions_hold(a, b, i, j, k)
+
+
+def test_corank_iteration_bound():
+    """Proposition 1: iterations <= ceil(log2 min(m, n, i, m+n-i))."""
+    rng = np.random.default_rng(1)
+    for m, n in [(33, 77), (128, 128), (1000, 10), (3, 500)]:
+        a = np.sort(rng.standard_normal(m)).astype(np.float32)
+        b = np.sort(rng.standard_normal(n)).astype(np.float32)
+        res = co_rank_batch(
+            jnp.arange(m + n + 1), jnp.asarray(a), jnp.asarray(b)
+        )
+        for i in range(m + n + 1):
+            lim = min(m, n, max(i, 1), max(m + n - i, 1))
+            bound = math.ceil(math.log2(lim)) if lim > 1 else 1
+            assert int(res.iterations[i]) <= max(bound, 1) + 1, (
+                m, n, i, int(res.iterations[i]), bound,
+            )
+
+
+def test_corank_duplicates_stability():
+    """With heavy duplication the co-rank must still split stably:
+    all equal A-elements in the prefix before any equal B-element."""
+    a = np.zeros(16, np.int32)
+    b = np.zeros(16, np.int32)
+    for i in range(33):
+        res = co_rank(i, jnp.asarray(a), jnp.asarray(b))
+        j, k = int(res.j), int(res.k)
+        # Stable merge of all-equal keys = all of A then all of B.
+        assert j == min(i, 16) and k == i - j
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    st.lists(st.integers(-50, 50), min_size=1, max_size=70),
+    st.lists(st.integers(-50, 50), min_size=1, max_size=70),
+    st.data(),
+)
+def test_corank_property(xs, ys, data):
+    a = np.sort(np.asarray(xs, np.int32))
+    b = np.sort(np.asarray(ys, np.int32))
+    i = data.draw(st.integers(0, len(a) + len(b)))
+    res = co_rank(i, jnp.asarray(a), jnp.asarray(b))
+    j, k = int(res.j), int(res.k)
+    assert (j, k) == oracle_corank(a, b, i)
+    assert lemma_conditions_hold(a, b, i, j, k)
+
+
+def test_corank_batch_vmap_consistency():
+    rng = np.random.default_rng(2)
+    a = np.sort(rng.integers(0, 100, 257)).astype(np.int32)
+    b = np.sort(rng.integers(0, 100, 129)).astype(np.int32)
+    ranks = jnp.asarray([0, 1, 57, 129, 257, 386], jnp.int32)
+    batch = co_rank_batch(ranks, jnp.asarray(a), jnp.asarray(b))
+    for t, i in enumerate([0, 1, 57, 129, 257, 386]):
+        single = co_rank(i, jnp.asarray(a), jnp.asarray(b))
+        assert int(batch.j[t]) == int(single.j)
+        assert int(batch.k[t]) == int(single.k)

@@ -1,0 +1,26 @@
+"""Multi-device merge/sort tests (subprocess: 8 fake host devices).
+
+The main pytest process must keep a single device (smoke tests and
+benchmarks expect it), so the 8-device run happens in a child process.
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def test_distributed_ops_eight_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tests" / "_distributed_check.py")],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=900,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "ALL OK" in proc.stdout

@@ -1,0 +1,41 @@
+"""Dry-run regression guard: one real cell must lower+compile on the
+production mesh (256 fake devices, subprocess so pytest keeps 1 device).
+
+This is the fast canary for deliverable (e): if sharding specs, cache
+layouts or the step functions regress, this fails in ~a minute instead of
+at the full 80-cell sweep.
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+SCRIPT = r"""
+import os, json, tempfile
+os.environ["DRYRUN_DEVICES"] = "256"
+import sys
+from repro.launch.dryrun import run_cell
+
+out = tempfile.mkdtemp()
+rec = run_cell("qwen3-0.6b", "decode_32k", False, out, force=True)
+assert rec["status"] == "ok", rec
+assert rec["collectives"]["total_bytes"] > 0
+assert rec["weighted"]["flops"] > 0
+mem = rec["memory"]
+assert mem["argument_size_in_bytes"] < 16 * 2**30  # fits one v5e HBM
+print("DRYRUN CELL OK")
+"""
+
+
+def test_dryrun_decode_cell_compiles():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    p = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True, text=True, env=env, timeout=1200,
+    )
+    assert p.returncode == 0, f"stdout:\n{p.stdout}\nstderr:\n{p.stderr[-3000:]}"
+    assert "DRYRUN CELL OK" in p.stdout

@@ -1,0 +1,71 @@
+"""Tests for merge sort / argsort / top-k built on the paper's merge."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import merge_argsort, merge_sort, merge_topk, sort_key_val
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 17, 64, 100, 1000])
+def test_merge_sort_values(n):
+    rng = np.random.default_rng(n)
+    x = rng.integers(-100, 100, n).astype(np.int32)
+    got = np.asarray(merge_sort(jnp.asarray(x)))
+    np.testing.assert_array_equal(got, np.sort(x, kind="stable"))
+
+
+@pytest.mark.parametrize("n", [5, 32, 77, 512])
+def test_merge_argsort_stable(n):
+    rng = np.random.default_rng(n + 1)
+    x = rng.integers(0, 5, n).astype(np.int32)  # heavy duplicates
+    got = np.asarray(merge_argsort(jnp.asarray(x)))
+    want = np.argsort(x, kind="stable")
+    np.testing.assert_array_equal(got, want)
+
+
+def test_sort_key_val_carries_payload():
+    keys = jnp.asarray([3, 1, 2, 1, 3, 0], jnp.int32)
+    vals = jnp.asarray([10, 11, 12, 13, 14, 15], jnp.int32)
+    k, v = sort_key_val(keys, vals)
+    np.testing.assert_array_equal(np.asarray(k), [0, 1, 1, 2, 3, 3])
+    np.testing.assert_array_equal(np.asarray(v), [15, 11, 13, 12, 10, 14])
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.integers(-3, 3), min_size=1, max_size=130))
+def test_merge_argsort_property(xs):
+    x = np.asarray(xs, np.int32)
+    got = np.asarray(merge_argsort(jnp.asarray(x)))
+    np.testing.assert_array_equal(got, np.argsort(x, kind="stable"))
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.lists(
+        st.floats(-100, 100, allow_nan=False, allow_subnormal=False, width=32),
+        min_size=1,
+        max_size=200,
+    )
+)
+def test_merge_sort_floats_property(xs):
+    x = np.asarray(xs, np.float32)
+    got = np.asarray(merge_sort(jnp.asarray(x)))
+    np.testing.assert_array_equal(got, np.sort(x, kind="stable"))
+
+
+@pytest.mark.parametrize("n,k", [(100, 5), (1000, 32), (64, 64), (513, 7)])
+def test_merge_topk(n, k):
+    rng = np.random.default_rng(n * k)
+    x = rng.standard_normal(n).astype(np.float32)
+    vals, idx = merge_topk(jnp.asarray(x), k)
+    order = np.argsort(-x, kind="stable")[:k]
+    np.testing.assert_allclose(np.asarray(vals), x[order], rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(idx), order)
+
+
+def test_merge_topk_ties_prefer_low_index():
+    x = jnp.asarray([1.0, 2.0, 2.0, 2.0, 0.5], jnp.float32)
+    vals, idx = merge_topk(x, 3)
+    np.testing.assert_array_equal(np.asarray(idx), [1, 2, 3])

@@ -1,0 +1,176 @@
+"""Model-math tests: SSD vs naive recurrence, flash attention (fwd + custom
+VJP) vs dense softmax, MLA absorbed decode vs decompressed attention."""
+
+import math
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import flash_attention, make_flash_attention_vjp
+from repro.models.ssm import ssd_chunked
+
+
+def naive_gqa(q, k, v, causal=True):
+    b, s, h, hd = q.shape
+    n_kv = k.shape[2]
+    g = h // n_kv
+    qg = q.reshape(b, s, n_kv, g, hd) / math.sqrt(hd)
+    sc = jnp.einsum("bqcgd,bkcd->bcgqk", qg, k).astype(jnp.float32)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        sc = jnp.where(mask[None, None, None], sc, -jnp.inf)
+    p = jax.nn.softmax(sc, -1).astype(q.dtype)
+    o = jnp.einsum("bcgqk,bkcd->bqcgd", p, v)
+    return o.reshape(b, s, h, v.shape[3])
+
+
+@pytest.mark.parametrize("qc,kc", [(16, 16), (64, 32), (128, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_forward_matches_dense(qc, kc, causal):
+    rng = np.random.default_rng(0)
+    b, s, h, n_kv, hd = 2, 128, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, n_kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, n_kv, hd)), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, q_chunk=qc, kv_chunk=kc)
+    want = naive_gqa(q, k, v, causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_flash_causal_skip_identical():
+    rng = np.random.default_rng(1)
+    b, s, h, n_kv, hd = 1, 256, 2, 1, 8
+    q = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, n_kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, n_kv, hd)), jnp.float32)
+    a = flash_attention(q, k, v, causal=True, q_chunk=64, kv_chunk=64)
+    b_ = flash_attention(
+        q, k, v, causal=True, q_chunk=64, kv_chunk=64, causal_skip=True
+    )
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-6)
+
+
+def test_flash_custom_vjp_grads():
+    rng = np.random.default_rng(2)
+    b, s, h, n_kv, hd = 2, 64, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, n_kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, n_kv, hd)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    fa = make_flash_attention_vjp(causal=True, q_chunk=16, kv_chunk=16)
+    g_ref = jax.grad(lambda *a: jnp.sum(naive_gqa(*a) * w), argnums=(0, 1, 2))(
+        q, k, v
+    )
+    g_fa = jax.grad(lambda *a: jnp.sum(fa(*a) * w), argnums=(0, 1, 2))(q, k, v)
+    for name, (a, b_) in zip("qkv", zip(g_ref, g_fa)):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b_), atol=5e-5,
+            err_msg=f"d{name} mismatch",
+        )
+
+
+def _naive_ssd(x, dt, b, c, a_log, d_skip):
+    bt, s, h, p = x.shape
+    g = b.shape[2]
+    hg = h // g
+    a = -np.exp(a_log)
+    H = np.zeros((bt, h, p, b.shape[3]))
+    ys = np.zeros((bt, s, h, p))
+    for t in range(s):
+        for hi in range(h):
+            gi = hi // hg
+            dec = np.exp(dt[:, t, hi] * a[hi])
+            H[:, hi] = H[:, hi] * dec[:, None, None] + dt[:, t, hi][
+                :, None, None
+            ] * np.einsum("bp,bn->bpn", x[:, t, hi], b[:, t, gi])
+            ys[:, t, hi] = (
+                np.einsum("bpn,bn->bp", H[:, hi], c[:, t, gi])
+                + d_skip[hi] * x[:, t, hi]
+            )
+    return ys, H
+
+
+@pytest.mark.parametrize("chunk", [1, 4, 16])
+@pytest.mark.parametrize("g", [1, 2])
+def test_ssd_chunked_matches_recurrence(chunk, g):
+    rng = np.random.default_rng(3)
+    bt, s, h, p, n = 2, 16, 4, 8, 5
+    x = rng.standard_normal((bt, s, h, p)).astype(np.float32)
+    dt = rng.uniform(0.01, 0.5, (bt, s, h)).astype(np.float32)
+    b = rng.standard_normal((bt, s, g, n)).astype(np.float32)
+    c = rng.standard_normal((bt, s, g, n)).astype(np.float32)
+    a_log = rng.uniform(-1, 1, (h,)).astype(np.float32)
+    d_skip = rng.standard_normal((h,)).astype(np.float32)
+    y, hl = ssd_chunked(
+        jnp.asarray(x), jnp.asarray(dt), jnp.asarray(b), jnp.asarray(c),
+        jnp.asarray(a_log), jnp.asarray(d_skip), {}, chunk=chunk,
+    )
+    want_y, want_h = _naive_ssd(x, dt, b, c, a_log, d_skip)
+    np.testing.assert_allclose(np.asarray(y), want_y, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(hl), want_h, atol=2e-5)
+
+
+def test_ssd_state_continuation():
+    """Splitting a sequence and carrying h0 must match the full pass —
+    the property serve-time decode relies on."""
+    rng = np.random.default_rng(4)
+    bt, s, h, p, g, n = 1, 32, 2, 4, 1, 3
+    args = lambda sl: (
+        jnp.asarray(rng2.standard_normal((bt, sl, h, p)), jnp.float32),
+    )
+    rng2 = rng
+    x = rng.standard_normal((bt, s, h, p)).astype(np.float32)
+    dt = rng.uniform(0.05, 0.4, (bt, s, h)).astype(np.float32)
+    b = rng.standard_normal((bt, s, g, n)).astype(np.float32)
+    c = rng.standard_normal((bt, s, g, n)).astype(np.float32)
+    a_log = np.zeros((h,), np.float32)
+    d = np.zeros((h,), np.float32)
+    full, _ = ssd_chunked(*map(jnp.asarray, (x, dt, b, c, a_log, d)), {},
+                          chunk=8)
+    y1, h1 = ssd_chunked(
+        *map(jnp.asarray, (x[:, :16], dt[:, :16], b[:, :16], c[:, :16],
+                           a_log, d)), {}, chunk=8,
+    )
+    y2, _ = ssd_chunked(
+        *map(jnp.asarray, (x[:, 16:], dt[:, 16:], b[:, 16:], c[:, 16:],
+                           a_log, d)), {}, chunk=8, h0=h1,
+    )
+    np.testing.assert_allclose(
+        np.concatenate([np.asarray(y1), np.asarray(y2)], 1),
+        np.asarray(full), atol=2e-5,
+    )
+
+
+def test_mla_absorbed_decode_matches_train():
+    """The absorbed decode path must equal decompress-then-attend on the
+    same single step (teacher forcing, step t attends cache 0..t)."""
+    import dataclasses
+
+    from repro.configs.registry import ARCHS, smoke_config
+    from repro.models.transformer import (
+        decode_step, hidden_states, init_cache, init_params, _unembed_table,
+    )
+
+    cfg = dataclasses.replace(smoke_config(ARCHS["deepseek-v3-671b"]))
+    params, _ = init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(5)
+    b, s = 2, 8
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+    h = hidden_states(cfg, params, toks)
+    logits_train = jnp.einsum(
+        "bsd,vd->bsv", h, _unembed_table(cfg, params).astype(h.dtype)
+    ).astype(jnp.float32)
+
+    cache = init_cache(cfg, b, s)
+    step = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
+    outs = []
+    for t in range(s):
+        lg, cache = step(params, cache, toks[:, t : t + 1])
+        outs.append(lg)
+    logits_decode = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(logits_decode), np.asarray(logits_train),
+        rtol=0.15, atol=0.2,  # bf16 path differences
+    )
