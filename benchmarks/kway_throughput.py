@@ -1,0 +1,92 @@
+"""Benchmark C7 — k-way fan-out vs the pairwise merge tree.
+
+Sweeps the bottom-up merge sort's ``fanout`` over {2, 4, 8, 16} against
+the pairwise baseline (``fanout=2``, the seed's ``sort_key_val``) and
+XLA's native ``jnp.sort``, plus the standalone k-way merge of k
+presorted runs vs a fold of pairwise rank-merges.
+
+Per pass an element does ``k-1`` binary searches instead of 1, but
+there are ``log2(k)``-times fewer passes — and each pass's scatter and
+output materialisation is the expensive part on CPU/TPU XLA, so larger
+fan-outs win once n is big enough to amortise the search work.
+
+Derived column: million elements sorted (or merged) per second.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.core.kway import merge_kway_ranked
+from repro.core.mergesort import merge_runs_ranked, sort_key_val
+
+
+def main():
+    rng = np.random.default_rng(7)
+
+    # --- full sorts: fanout sweep vs pairwise vs jnp.sort ---------------
+    for size in (1 << 16, 1 << 18, 1 << 20):
+        keys = jnp.asarray(
+            rng.integers(0, 1 << 30, size), jnp.int32
+        )
+        vals = jnp.arange(size, dtype=jnp.int32)
+
+        def meps(us):
+            return f"{size / us:.1f}Melem/s"
+
+        base_us = None
+        for fanout in (2, 4, 8, 16):
+            fn = jax.jit(
+                lambda k, v, f=fanout: sort_key_val(k, v, fanout=f)
+            )
+            us = time_fn(fn, keys, vals)
+            tag = meps(us)
+            if fanout == 2:
+                base_us = us
+            else:
+                tag += f";vs_pairwise={base_us / us:.2f}x"
+            row(f"kway_sort/fanout{fanout}/{size}", us, tag)
+
+        us = time_fn(jax.jit(lambda k: jnp.sort(k, stable=True)), keys)
+        row(f"kway_sort/xla_native/{size}", us, meps(us))
+
+    # --- standalone k-run merge: one k-way pass vs pairwise fold --------
+    for k, w in ((4, 1 << 16), (8, 1 << 15), (16, 1 << 14)):
+        runs = jnp.asarray(
+            np.sort(rng.integers(0, 1 << 30, (k, w)), axis=1), jnp.int32
+        )
+        total = k * w
+
+        def pairwise_fold(runs):
+            cur, width = runs, runs.shape[1]
+            n = runs.shape[0]
+            while n > 1:
+                merged, _ = merge_runs_ranked(
+                    cur.reshape(n // 2, 2, width), None
+                )
+                cur, n, width = merged, n // 2, width * 2
+            return cur[0]
+
+        us_k = time_fn(jax.jit(merge_kway_ranked), runs)
+        us_p = time_fn(jax.jit(pairwise_fold), runs)
+        row(f"kway_merge/kway/{k}x{w}", us_k,
+            f"{total / us_k:.1f}Melem/s;vs_pairwise={us_p / us_k:.2f}x")
+        row(f"kway_merge/pairwise_tree/{k}x{w}", us_p,
+            f"{total / us_p:.1f}Melem/s")
+
+    # Pallas interpret mode is Python-speed; report once, small size.
+    from repro.kernels.merge import merge_kway_pallas
+
+    runs = jnp.asarray(
+        np.sort(rng.integers(0, 1 << 30, (4, 1 << 10)), axis=1), jnp.int32
+    )
+    us = time_fn(lambda r: merge_kway_pallas(r, tile=512), runs)
+    row(f"kway_merge/pallas_interpret/4x{1 << 10}", us,
+        f"{(4 << 10) / us:.2f}Melem/s")
+
+
+if __name__ == "__main__":
+    main()

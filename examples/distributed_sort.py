@@ -13,8 +13,9 @@ os.environ["XLA_FLAGS"] = (
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.compat import shard_map
 
 from repro.core.distributed import (
     distributed_co_rank,

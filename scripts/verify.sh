@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Tier-1 verification entry point.
+#
+#   scripts/verify.sh          # full tier-1 suite (the ROADMAP command)
+#   scripts/verify.sh --fast   # skip @pytest.mark.slow subprocess tests
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--fast" ]]; then
+    exec python -m pytest -q -m "not slow"
+fi
+exec python -m pytest -x -q

@@ -7,9 +7,17 @@ from repro.core.merge import (
     merge_segment_twofinger,
     partition_bounds,
 )
+from repro.core.kway import (
+    co_rank_kway,
+    co_rank_kway_batch,
+    kway_positions,
+    merge_kway,
+    merge_kway_ranked,
+)
 from repro.core.mergesort import (
     merge_argsort,
     merge_pairs_ranked,
+    merge_runs_ranked,
     merge_sort,
     sort_key_val,
 )
@@ -29,8 +37,14 @@ __all__ = [
     "merge_partitioned",
     "merge_segment_twofinger",
     "partition_bounds",
+    "co_rank_kway",
+    "co_rank_kway_batch",
+    "kway_positions",
+    "merge_kway",
+    "merge_kway_ranked",
     "merge_argsort",
     "merge_pairs_ranked",
+    "merge_runs_ranked",
     "merge_sort",
     "sort_key_val",
     "merge_topk",

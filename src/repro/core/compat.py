@@ -1,0 +1,37 @@
+"""JAX version compatibility shims (installed 0.4.x vs current APIs)."""
+
+from __future__ import annotations
+
+import jax
+from jax import lax
+
+__all__ = ["shard_map", "axis_size"]
+
+try:  # JAX >= 0.6 exports shard_map at top level
+    from jax import shard_map as _shard_map_impl
+except ImportError:  # JAX 0.4.x keeps it under experimental
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """Version-tolerant ``shard_map``: JAX 0.4.x needs ``check_rep=False``
+    for while-loops inside the mapped fn (the co-rank searches); newer JAX
+    renamed/removed the flag, so fall back to the plain call."""
+    try:
+        return _shard_map_impl(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=False,
+        )
+    except TypeError:
+        return _shard_map_impl(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs
+        )
+
+
+def axis_size(axis_name):
+    """Static size of a mapped axis, inside shard_map/pmap."""
+    if hasattr(lax, "axis_size"):  # JAX >= 0.5
+        return lax.axis_size(axis_name)
+    if hasattr(jax.core, "axis_frame"):  # JAX 0.4.x: returns the int size
+        return jax.core.axis_frame(axis_name)
+    return lax.psum(1, axis_name)  # last resort: constant-folded collective

@@ -35,8 +35,9 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.corank import co_rank
-from repro.core.merge import merge_by_ranking, partition_bounds
-from repro.core.mergesort import merge_pairs_ranked, merge_sort
+from repro.core.kway import co_rank_kway_batch, merge_kway_ranked
+from repro.core.merge import merge_by_ranking
+from repro.core.mergesort import merge_sort
 
 __all__ = [
     "distributed_merge",
@@ -45,8 +46,7 @@ __all__ = [
 ]
 
 
-def _axis_size(axis_name):
-    return lax.axis_size(axis_name)
+from repro.core.compat import axis_size as _axis_size  # noqa: E402
 
 
 # ---------------------------------------------------------------------------
@@ -209,10 +209,13 @@ def distributed_sort(x_shard: jax.Array, axis_name: str) -> jax.Array:
 
     1. local stable merge sort;
     2. all_gather of locally sorted shards (ring on ICI);
-    3. every device extracts *its exact output block* by co-ranking the
-       global bounds into the p sorted runs (multiway co-rank = fold of
-       pairwise merges, vectorised) — perfect balance: each device ends
-       with exactly N/p elements.
+    3. every device extracts *its exact output block* in ONE step with
+       the multi-way co-rank: the two block bounds are cut into all ``p``
+       sorted runs at once (``repro.core.kway``), and the p segments —
+       whose lengths sum to exactly N/p, perfect balance — are merged
+       locally with the k-way rank merge.  No ``log2(p)`` pairwise merge
+       tree, and each device merges only its own N/p elements instead of
+       materialising the full N-element sort.
 
     Stability across shards: device order breaks ties (shard d's elements
     precede shard d+1's equal elements), matching a global stable sort.
@@ -223,22 +226,13 @@ def distributed_sort(x_shard: jax.Array, axis_name: str) -> jax.Array:
     runs = lax.all_gather(local, axis_name)  # (p, N/p) sorted runs, in order
     np_, width = runs.shape
     total = np_ * width
+    s = total // p
 
-    # Fold pairwise stable merges (log p rounds, vectorised over pairs) —
-    # each round halves the run count; run order preserves shard order so
-    # the result is the global stable sort.
-    k = runs
-    cur_runs, cur_width = np_, width
-    while cur_runs > 1:
-        if cur_runs % 2 == 1:
-            pad = jnp.full((1, cur_width), _sentinel(k.dtype), k.dtype)
-            k = jnp.concatenate([k, pad], axis=0)
-            cur_runs += 1
-        merged, _ = merge_pairs_ranked(
-            k.reshape(cur_runs // 2, 2, cur_width), None
-        )
-        k = merged
-        cur_runs //= 2
-        cur_width *= 2
-    full = k[0][:total]
-    return lax.dynamic_slice(full, (r * (total // p),), (total // p,))
+    # Both block endpoints cut in one lock-step batched search.
+    cuts = co_rank_kway_batch(jnp.stack([r * s, (r + 1) * s]), runs)
+    lo, hi = cuts[0], cuts[1]  # (p,) cuts of block start / end
+
+    # Per-run windows of static length s (head = real segment, tail =
+    # sentinel); segment lengths hi-lo sum to exactly s.
+    windows = jax.vmap(lambda row, a, b: _window(row, a, b, s))(runs, lo, hi)
+    return merge_kway_ranked(windows, lengths=hi - lo, out_len=s)

@@ -1,0 +1,272 @@
+"""Multi-way co-ranking and perfectly load-balanced k-way stable merge.
+
+Generalises the paper's two-sequence co-rank (Siebert & Träff 2013,
+Lemma 1) to ``k`` sorted runs, following the "Multi-Way Co-Ranking"
+formulation (Joshi 2025) and the diagonal view of Merge Path (Green et
+al. 2014): an output rank ``i`` induces a unique *cut vector*
+``(j_0, ..., j_{k-1})`` with ``sum(j_r) == i`` such that the first ``i``
+elements of the stable k-way merge are exactly
+``runs[0][:j_0] ∪ ... ∪ runs[k-1][:j_{k-1}]``.
+
+Stability is "run index breaks ties": element ``(r, t)`` precedes
+``(r', t')`` iff ``(value, r, t) < (value', r', t')`` lexicographically.
+Under that order the *merged rank* of element ``(r, t)`` is
+
+    rank(r, t) = t + sum_{r' < r} |{u : runs[r'][u] <= runs[r][t]}|
+                   + sum_{r' > r} |{u : runs[r'][u] <  runs[r][t]}|
+
+— the ``<=`` / ``<`` asymmetry is exactly Lemma 1's, applied pairwise to
+every other run.  ``rank(r, ·)`` is strictly increasing, so the cut
+
+    j_r(i) = |{t : rank(r, t) < i}|
+
+is found by one binary search per run whose predicate evaluates the
+k-way Lemma-1 conditions (``ceil(log2 w)+1`` rounds, each round ``k``
+``searchsorted`` probes — all runs search in lock-step, vectorised).
+``sum_r j_r(i) == i`` holds exactly because ``rank`` is a bijection onto
+``0..k*w-1``.
+
+On top of the cut sit two merges:
+
+* ``merge_kway_ranked`` — fully data-parallel: every element's output
+  position is its merged rank (k-1 vectorised ``searchsorted`` per run),
+  one scatter.  The fast pure-XLA path used by the fan-out merge sort.
+* ``merge_kway`` — the paper-faithful partitioned form: ``p`` processing
+  elements each co-rank the two endpoints of an output block of size
+  ``ceil(total/p)`` (perfect balance, Proposition 2 carries over
+  verbatim) and run a sequential k-finger merge of exactly their
+  segments.
+
+Ragged runs are supported via ``lengths``: rows must stay sorted over
+their full width (pad with a value >= every real element, e.g. dtype
+max); padded positions are never counted or emitted.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.merge import partition_bounds
+
+__all__ = [
+    "co_rank_kway",
+    "co_rank_kway_batch",
+    "kway_positions",
+    "merge_kway_ranked",
+    "merge_kway",
+]
+
+
+def _pair_counts_matrix(k: int):
+    """(rp, r) index grids for choosing the Lemma-1 side per run pair."""
+    rp = jnp.arange(k, dtype=jnp.int32)[:, None]
+    r = jnp.arange(k, dtype=jnp.int32)[None, :]
+    return rp, r
+
+
+def co_rank_kway(
+    i: jax.Array, runs: jax.Array, lengths: jax.Array | None = None
+) -> jax.Array:
+    """Cut vector ``j`` (shape ``(k,)``) of output rank ``i`` into ``runs``.
+
+    Args:
+      i: output rank, ``0 <= i <= sum(lengths)`` (scalar, may be traced).
+      runs: ``(k, w)`` array, every row sorted ascending over its full
+        width (pad ragged rows with row-wise maximal values).
+      lengths: optional ``(k,)`` real lengths; defaults to ``w`` each.
+
+    Returns:
+      int32 ``(k,)`` cut indices with ``j.sum() == min(i, total)``; the
+      stable k-way merge of the runs restricted to ``runs[r][:j[r]]`` is
+      exactly its first ``i`` elements.
+    """
+    k, w = runs.shape
+    i = jnp.asarray(i, jnp.int32)
+    if lengths is None:
+        lengths = jnp.full((k,), w, jnp.int32)
+    else:
+        lengths = jnp.asarray(lengths, jnp.int32)
+    rp, r = _pair_counts_matrix(k)
+    rows = jnp.arange(k, dtype=jnp.int32)
+
+    def merged_rank(t: jax.Array) -> jax.Array:
+        """rank(r, t_r) for candidate indices ``t`` (k,), vectorised."""
+        x = runs[rows, jnp.clip(t, 0, w - 1)]  # (k,) candidate values
+        ssl = jax.vmap(lambda row: jnp.searchsorted(row, x, side="left"))(
+            runs
+        ).astype(jnp.int32)
+        ssr = jax.vmap(lambda row: jnp.searchsorted(row, x, side="right"))(
+            runs
+        ).astype(jnp.int32)
+        # [rp, r]: runs before r count ties (<=), runs after strictly (<).
+        cnt = jnp.where(rp < r, ssr, ssl)
+        cnt = jnp.where(rp == r, 0, cnt)
+        cnt = jnp.minimum(cnt, lengths[:, None])  # never count padding
+        return t + cnt.sum(axis=0)
+
+    # Lock-step binary search per run: j_r = |{t : rank(r, t) < i}| over
+    # the monotone predicate; fixed round count keeps the loop static.
+    rounds = max(1, w).bit_length() + 1
+
+    def body(_, lo_hi):
+        lo, hi = lo_hi
+        mid = (lo + hi) // 2
+        pred = (mid < lengths) & (merged_rank(mid) < i)
+        return jnp.where(pred, mid + 1, lo), jnp.where(pred, hi, mid)
+
+    lo = jnp.zeros((k,), jnp.int32)
+    lo, _ = lax.fori_loop(0, rounds, body, (lo, lengths))
+    return lo
+
+
+def co_rank_kway_batch(
+    i: jax.Array, runs: jax.Array, lengths: jax.Array | None = None
+) -> jax.Array:
+    """Vectorised cuts for ranks ``i`` of shape ``(b,)`` -> ``(b, k)``."""
+    return jax.vmap(co_rank_kway, in_axes=(0, None, None))(i, runs, lengths)
+
+
+def kway_positions(
+    runs: jax.Array, lengths: jax.Array | None = None
+) -> jax.Array:
+    """Merged rank of *every* element: ``(k, w) -> (k, w)`` int32.
+
+    The element-wise form of the cut characterisation — the k-way
+    generalisation of ``merge_by_ranking``'s position computation.  Each
+    element is searched into exactly its ``k-1`` sibling runs (the
+    Python loop over runs unrolls at trace time; every probe is a
+    vectorised ``searchsorted``).  Positions of padded elements
+    (``t >= lengths[r]``) are meaningless; callers mask them before
+    scattering.
+    """
+    k, w = runs.shape
+    if lengths is None:
+        # Hot path (uniform runs): element (r, t) is searched into each
+        # sibling rp once — runs after rp count ties into rp
+        # (<=, side='right'), runs before it count strictly
+        # (<, side='left'): Lemma 1 applied pairwise.
+        cnt = jnp.zeros((k, w), jnp.int32)
+        for rp in range(k):
+            row = runs[rp]
+            if rp + 1 < k:
+                cr = jnp.searchsorted(row, runs[rp + 1 :], side="right")
+                cnt = cnt.at[rp + 1 :].add(cr.astype(jnp.int32))
+            if rp > 0:
+                cl = jnp.searchsorted(row, runs[:rp], side="left")
+                cnt = cnt.at[:rp].add(cl.astype(jnp.int32))
+    else:
+        # Ragged runs (cold path): per-pair counts must be clipped to the
+        # sibling's real length before summing, so keep the pair matrix.
+        lengths = jnp.asarray(lengths, jnp.int32)
+        rp_g, r_g = _pair_counts_matrix(k)
+        ssl = jax.vmap(
+            lambda row: jnp.searchsorted(row, runs, side="left")
+        )(runs).astype(jnp.int32)
+        ssr = jax.vmap(
+            lambda row: jnp.searchsorted(row, runs, side="right")
+        )(runs).astype(jnp.int32)
+        cnt_m = jnp.where(rp_g[..., None] < r_g[..., None], ssr, ssl)
+        cnt_m = jnp.where(rp_g[..., None] == r_g[..., None], 0, cnt_m)
+        cnt = jnp.minimum(cnt_m, lengths[:, None, None]).sum(axis=0)
+    return jnp.arange(w, dtype=jnp.int32)[None, :] + cnt
+
+
+def merge_kway_ranked(
+    runs: jax.Array,
+    vals: jax.Array | None = None,
+    lengths: jax.Array | None = None,
+    out_len: int | None = None,
+):
+    """Stable k-way merge, data-parallel scatter formulation.
+
+    ``runs``: ``(k, w)`` sorted rows (+ optional ``vals`` payload of the
+    same shape, carried through).  Returns the merged ``(total,)`` keys
+    (and payload), ``total = out_len or k*w``; with ``lengths`` given,
+    padded elements are dropped and the tail of the output (positions
+    ``>= sum(lengths)``) is zero.
+    """
+    k, w = runs.shape
+    total = k * w if out_len is None else out_len
+    pos = kway_positions(runs, lengths)
+    if lengths is not None:
+        invalid = jnp.arange(w, dtype=jnp.int32)[None, :] >= jnp.asarray(
+            lengths, jnp.int32
+        )[:, None]
+        pos = jnp.where(invalid, total, pos)  # scatter-dropped
+    flat_pos = pos.reshape(-1)
+    out = jnp.zeros((total,), runs.dtype)
+    out = out.at[flat_pos].set(runs.reshape(-1), mode="drop")
+    if vals is None:
+        return out
+    out_v = jnp.zeros((total,), vals.dtype)
+    out_v = out_v.at[flat_pos].set(vals.reshape(-1), mode="drop")
+    return out, out_v
+
+
+def _kfinger_segment(
+    runs: jax.Array,
+    lo: jax.Array,
+    hi: jax.Array,
+    seg_len: int,
+) -> jax.Array:
+    """Sequential k-finger stable merge of ``runs[r][lo_r:hi_r]`` into a
+    static ``(seg_len,)`` buffer (the per-PE "optimal sequential merge");
+    ``sum(hi - lo) <= seg_len``.  ``fori_loop`` body so it vmaps across
+    processing elements.
+    """
+    k, w = runs.shape
+    rows = jnp.arange(k, dtype=jnp.int32)
+
+    def step(t, state):
+        cur, out = state
+        vals = runs[rows, jnp.clip(cur, 0, w - 1)]
+        avail = cur < hi
+        # Fold min with availability flags: strict '<' keeps the earliest
+        # run on ties — the run-index stability rule — and avoids any
+        # sentinel that could collide with real dtype-max values.
+        best_val, best_q, best_ok = vals[0], jnp.int32(0), avail[0]
+        for q in range(1, k):
+            better = avail[q] & (~best_ok | (vals[q] < best_val))
+            best_val = jnp.where(better, vals[q], best_val)
+            best_q = jnp.where(better, jnp.int32(q), best_q)
+            best_ok = best_ok | avail[q]
+        out = lax.dynamic_update_index_in_dim(
+            out, jnp.where(best_ok, best_val, out[t]), t, 0
+        )
+        cur = cur + ((rows == best_q) & best_ok)
+        return cur, out
+
+    out = jnp.zeros((seg_len,), runs.dtype)
+    _, out = lax.fori_loop(0, seg_len, step, (lo, out))
+    return out
+
+
+@partial(jax.jit, static_argnames=("p",))
+def merge_kway(runs: jax.Array, p: int = 8) -> jax.Array:
+    """Perfectly load-balanced stable merge of ``k`` sorted runs.
+
+    Algorithm 2 with the pairwise co-rank replaced by the multi-way cut:
+    each of ``p`` processing elements co-ranks both endpoints of its
+    output block (sizes differ by at most one, Proposition 2) and merges
+    exactly its ``k`` input segments with a sequential k-finger merge.
+    One partitioning step for any ``k`` — no ``log2(k)`` pairwise tree.
+    """
+    k, w = runs.shape
+    total = k * w
+    bounds = partition_bounds(total, p)  # (p+1,)
+    cuts = co_rank_kway_batch(bounds, runs)  # (p+1, k)
+    seg_len = -(-total // p)
+
+    segs = jax.vmap(
+        lambda lo, hi: _kfinger_segment(runs, lo, hi, seg_len)
+    )(cuts[:-1], cuts[1:])  # (p, seg_len)
+
+    idx = bounds[:-1, None] + jnp.arange(seg_len, dtype=jnp.int32)[None, :]
+    valid = idx < bounds[1:, None]
+    out = jnp.zeros((total,), runs.dtype)
+    out = out.at[jnp.where(valid, idx, total)].set(segs, mode="drop")
+    return out

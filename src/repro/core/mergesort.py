@@ -1,27 +1,42 @@
 """Stable merge sort built from the co-rank merge primitive.
 
-Bottom-up merge sort: ``log2(n)`` passes; pass ``w`` merges adjacent runs of
-width ``w`` into runs of width ``2w``.  Every pairwise merge is the stable
-rank-merge from ``repro.core.merge`` (Lemma 1 applied element-wise), so the
-whole sort is stable without key widening — the property the MoE router and
-the sampling stack rely on.
+Bottom-up merge sort with configurable fan-out: pass ``w`` merges groups
+of ``fanout`` adjacent runs of width ``w`` into runs of width
+``fanout*w`` with the k-way rank merge from ``repro.core.kway`` —
+``log_fanout(n)`` passes instead of the pairwise tree's ``log2(n)``.
+Every pass is stable (lower run index wins ties, and runs are laid out
+in input order), so the whole sort is stable without key widening — the
+property the MoE router and the sampling stack rely on.
 
-The input is padded to the next power of two with ``+inf``-like sentinels
-(dtype max), which sort to the tail and are sliced off.  All passes are fully
-vectorised: the ``r`` runs of a pass are a leading batch dimension, so a pass
-is one fused XLA op sequence, and the whole sort is ``O(n log^2 n)``
-comparisons with depth ``O(log^2 n)`` — the standard EREW-style realisation
-of the paper's merge on a vector machine.
+The input is padded to the next power of two with ``+inf``-like
+sentinels (dtype max), which sort to the tail and are sliced off.  All
+passes are fully vectorised: the ``g`` groups of a pass are a leading
+batch dimension, so a pass is one fused XLA op sequence.  Per pass an
+element performs ``k-1`` binary searches but there are ``log_k``-fewer
+passes (and fewer scatters / output materialisations), which is the
+trade the k-way fan-out wins on — see ``benchmarks/kway_throughput.py``.
 """
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
-__all__ = ["merge_sort", "merge_argsort", "sort_key_val", "merge_pairs_ranked"]
+from repro.core.kway import kway_positions
+
+__all__ = [
+    "merge_sort",
+    "merge_argsort",
+    "sort_key_val",
+    "merge_pairs_ranked",
+    "merge_runs_ranked",
+    "DEFAULT_FANOUT",
+]
+
+# Pass fan-out used when callers don't specify one.  4 is the measured
+# sweet spot on XLA CPU (half the passes of pairwise at only ~1.5x the
+# comparison count); see benchmarks/kway_throughput.py.
+DEFAULT_FANOUT = 4
 
 
 def _sentinel_max(dtype) -> jnp.ndarray:
@@ -30,30 +45,34 @@ def _sentinel_max(dtype) -> jnp.ndarray:
     return jnp.array(jnp.iinfo(dtype).max, dtype)
 
 
-def merge_pairs_ranked(keys: jax.Array, vals: jax.Array | None):
-    """Merge adjacent sorted runs: ``keys`` has shape ``(r, 2, w)`` where
-    ``keys[:, 0]`` and ``keys[:, 1]`` are each sorted; returns ``(r, 2w)``
-    stably merged (run 0 wins ties).  ``vals`` (same shape) is carried.
+def merge_runs_ranked(keys: jax.Array, vals: jax.Array | None):
+    """Merge groups of adjacent sorted runs: ``keys`` has shape
+    ``(g, k, w)`` where every ``keys[i, r]`` is sorted; returns
+    ``(g, k*w)`` stably merged (lower ``r`` wins ties).  ``vals`` (same
+    shape) is carried through the same permutation.
     """
-    a, b = keys[:, 0, :], keys[:, 1, :]
-    r, w = a.shape
-    # Element-wise co-ranks (Lemma 1): A uses side='left' (<=), B 'right' (<).
-    pos_a = jnp.arange(w, dtype=jnp.int32)[None, :] + jax.vmap(
-        lambda x, y: jnp.searchsorted(y, x, side="left")
-    )(a, b).astype(jnp.int32)
-    pos_b = jnp.arange(w, dtype=jnp.int32)[None, :] + jax.vmap(
-        lambda x, y: jnp.searchsorted(y, x, side="right")
-    )(b, a).astype(jnp.int32)
-    out_k = jnp.zeros((r, 2 * w), dtype=keys.dtype)
-    out_k = out_k.at[jnp.arange(r)[:, None], pos_a].set(a, unique_indices=True)
-    out_k = out_k.at[jnp.arange(r)[:, None], pos_b].set(b, unique_indices=True)
+    g, k, w = keys.shape
+    pos = jax.vmap(kway_positions)(keys)  # (g, k, w)
+    rows = jnp.arange(g, dtype=jnp.int32)[:, None]
+    flat_pos = pos.reshape(g, k * w)
+    out_k = jnp.zeros((g, k * w), dtype=keys.dtype)
+    out_k = out_k.at[rows, flat_pos].set(
+        keys.reshape(g, k * w), unique_indices=True
+    )
     if vals is None:
         return out_k, None
-    va, vb = vals[:, 0, :], vals[:, 1, :]
-    out_v = jnp.zeros((r, 2 * w), dtype=vals.dtype)
-    out_v = out_v.at[jnp.arange(r)[:, None], pos_a].set(va, unique_indices=True)
-    out_v = out_v.at[jnp.arange(r)[:, None], pos_b].set(vb, unique_indices=True)
+    out_v = jnp.zeros((g, k * w), dtype=vals.dtype)
+    out_v = out_v.at[rows, flat_pos].set(
+        vals.reshape(g, k * w), unique_indices=True
+    )
     return out_k, out_v
+
+
+def merge_pairs_ranked(keys: jax.Array, vals: jax.Array | None):
+    """Pairwise special case kept for callers and benchmarks:
+    ``keys``/``vals`` of shape ``(r, 2, w)`` -> ``(r, 2w)``.
+    """
+    return merge_runs_ranked(keys, vals)
 
 
 def _padded_pow2(n: int) -> int:
@@ -63,8 +82,20 @@ def _padded_pow2(n: int) -> int:
     return p
 
 
-def sort_key_val(keys: jax.Array, vals: jax.Array):
-    """Stable sort of ``(keys, vals)`` by ``keys`` (1-D), merge-sort based."""
+def _check_fanout(fanout: int):
+    if fanout < 2 or fanout & (fanout - 1):
+        raise ValueError(f"fanout must be a power of two >= 2, got {fanout}")
+
+
+def sort_key_val(keys: jax.Array, vals: jax.Array,
+                 fanout: int = DEFAULT_FANOUT):
+    """Stable sort of ``(keys, vals)`` by ``keys`` (1-D), merge-sort based.
+
+    ``fanout``: runs merged per pass (power of two).  ``fanout=2`` is the
+    paper's pairwise tree; larger fan-outs cut the pass count to
+    ``log_fanout(n)``.
+    """
+    _check_fanout(fanout)
     n = keys.shape[0]
     if n <= 1:
         return keys, vals
@@ -74,17 +105,19 @@ def sort_key_val(keys: jax.Array, vals: jax.Array):
     v = jnp.concatenate([vals, jnp.zeros((pad,), vals.dtype)])
     width = 1
     while width < np2:
-        runs = np2 // (2 * width)
-        k2, v2 = merge_pairs_ranked(
-            k.reshape(runs, 2, width), v.reshape(runs, 2, width)
+        group = min(fanout, np2 // width)  # both powers of two: divides
+        g = np2 // (group * width)
+        k2, v2 = merge_runs_ranked(
+            k.reshape(g, group, width), v.reshape(g, group, width)
         )
         k, v = k2.reshape(np2), v2.reshape(np2)
-        width *= 2
+        width *= group
     return k[:n], v[:n]
 
 
-def merge_sort(x: jax.Array) -> jax.Array:
-    """Stable merge sort of a 1-D array."""
+def merge_sort(x: jax.Array, fanout: int = DEFAULT_FANOUT) -> jax.Array:
+    """Stable merge sort of a 1-D array (k-way bottom-up passes)."""
+    _check_fanout(fanout)
     n = x.shape[0]
     if n <= 1:
         return x
@@ -92,18 +125,19 @@ def merge_sort(x: jax.Array) -> jax.Array:
     k = jnp.concatenate([x, jnp.full((np2 - n,), _sentinel_max(x.dtype))])
     width = 1
     while width < np2:
-        runs = np2 // (2 * width)
-        k, _ = merge_pairs_ranked(k.reshape(runs, 2, width), None)
+        group = min(fanout, np2 // width)
+        g = np2 // (group * width)
+        k, _ = merge_runs_ranked(k.reshape(g, group, width), None)
         k = k.reshape(np2)
-        width *= 2
+        width *= group
     return k[:n]
 
 
-def merge_argsort(x: jax.Array) -> jax.Array:
+def merge_argsort(x: jax.Array, fanout: int = DEFAULT_FANOUT) -> jax.Array:
     """Stable argsort (equal keys keep input order) via sort_key_val."""
-    _, idx = sort_key_val(x, jnp.arange(x.shape[0], dtype=jnp.int32))
+    _, idx = sort_key_val(x, jnp.arange(x.shape[0], dtype=jnp.int32), fanout)
     return idx
 
 
-merge_sort_jit = jax.jit(merge_sort)
-sort_key_val_jit = jax.jit(sort_key_val)
+merge_sort_jit = jax.jit(merge_sort, static_argnames=("fanout",))
+sort_key_val_jit = jax.jit(sort_key_val, static_argnames=("fanout",))

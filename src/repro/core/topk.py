@@ -1,16 +1,20 @@
-"""Top-k selection built on the co-rank merge primitive.
+"""Top-k selection built on the k-way co-rank merge primitive.
 
-Two-stage tournament (the classic distributed-selection shape, with every
-stage expressed as stable merges):
+Two-stage tournament (the classic distributed-selection shape, with
+every stage expressed as stable merges):
 
-  1. split the row into blocks of ``block`` elements, merge-sort each block
-     descending (vectorised over blocks),
-  2. repeatedly *merge* adjacent blocks' candidate lists pairwise — after a
-     merge only the top ``k`` of the ``2k`` candidates can survive, so each
-     round halves the number of candidate lists at constant width ``k``.
+  1. split the row into blocks of ``block`` elements, merge-sort each
+     block descending (vectorised over blocks),
+  2. collapse all per-block candidate lists with a *k-way* candidate
+     merge: groups of up to ``fanout`` lists merge in one co-ranked step
+     and only the top ``k`` of each merged ``fanout*k`` list survive.
+     With ``nb <= fanout`` blocks the whole tournament is a single k-way
+     merge; otherwise it takes ``log_fanout(nb)`` rounds instead of the
+     pairwise tree's ``log2(nb)``.
 
-Stability: equal keys resolve to the lower original index (A-run before
-B-run, and in-block sort is stable), matching ``jax.lax.top_k`` semantics.
+Stability: equal keys resolve to the lower original index (lower run
+index wins ties in the k-way merge, and the in-block sort is stable),
+matching ``jax.lax.top_k`` semantics.
 """
 
 from __future__ import annotations
@@ -20,35 +24,48 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.mergesort import merge_pairs_ranked
+from repro.core.mergesort import (
+    DEFAULT_FANOUT,
+    _padded_pow2,
+    merge_runs_ranked,
+)
 
 __all__ = ["merge_topk"]
 
+# Candidate lists merged per tournament round; 16 collapses any
+# realistic block count in one or two rounds.
+TOURNAMENT_FANOUT = 16
+
 
 def _desc_sort_blocks(keys: jax.Array, vals: jax.Array):
-    """Stable descending sort within each row of ``keys``/``vals`` (r, w)."""
+    """Stable ascending sort within each row of ``keys``/``vals`` (r, w)."""
     r, w = keys.shape
     width = 1
     k, v = keys, vals
     while width < w:
-        runs = (r * w) // (2 * width)
-        k2, v2 = merge_pairs_ranked(
-            k.reshape(runs, 2, width), v.reshape(runs, 2, width)
+        group = min(DEFAULT_FANOUT, w // width)
+        g = (r * w) // (group * width)
+        k2, v2 = merge_runs_ranked(
+            k.reshape(g, group, width), v.reshape(g, group, width)
         )
         k, v = k2.reshape(r, w), v2.reshape(r, w)
-        width *= 2
+        width *= group
     return k, v
 
 
-@partial(jax.jit, static_argnames=("k", "block"))
-def merge_topk(x: jax.Array, k: int, block: int = 128):
+@partial(jax.jit, static_argnames=("k", "block", "fanout"))
+def merge_topk(x: jax.Array, k: int, block: int = 128,
+               fanout: int = TOURNAMENT_FANOUT):
     """Top-k of a 1-D array: returns ``(values, indices)`` descending.
 
     Keys are negated so the underlying ascending stable merge yields a
     descending order with ties broken toward the lower index.
     """
+    if fanout < 2:
+        raise ValueError(f"fanout must be >= 2, got {fanout}")
     n = x.shape[0]
-    block = max(block, k)
+    # power-of-two block so the in-block sort's run reshapes stay aligned
+    block = _padded_pow2(max(block, k))
     nb = -(-n // block)
     pad = nb * block - n
     neg = -x.astype(jnp.float32) if jnp.issubdtype(x.dtype, jnp.floating) else -x
@@ -62,17 +79,19 @@ def merge_topk(x: jax.Array, k: int, block: int = 128):
     keys, idx = _desc_sort_blocks(keys, idx)  # ascending in negated keys
     keys, idx = keys[:, :k], idx[:, :k]  # per-block top-k candidates
 
-    # Tournament: pairwise merge candidate lists, keep top-k each round.
+    # Tournament: k-way merge candidate lists, keep top-k each round.
     while keys.shape[0] > 1:
         r = keys.shape[0]
-        if r % 2 == 1:  # odd: carry the last list through unchanged
+        group = min(fanout, r)
+        if r % group:  # pad with sentinel lists to a group multiple
+            extra = group - r % group
             keys = jnp.concatenate(
-                [keys, jnp.full((1, k), sentinel, keys.dtype)]
+                [keys, jnp.full((extra, k), sentinel, keys.dtype)]
             )
-            idx = jnp.concatenate([idx, jnp.zeros((1, k), idx.dtype)])
-            r += 1
-        mk, mi = merge_pairs_ranked(
-            keys.reshape(r // 2, 2, k), idx.reshape(r // 2, 2, k)
+            idx = jnp.concatenate([idx, jnp.zeros((extra, k), idx.dtype)])
+            r += extra
+        mk, mi = merge_runs_ranked(
+            keys.reshape(r // group, group, k), idx.reshape(r // group, group, k)
         )
         keys, idx = mk[:, :k], mi[:, :k]
 

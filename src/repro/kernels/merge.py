@@ -37,8 +37,19 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.corank import co_rank_batch
+from repro.core.kway import co_rank_kway_batch
 
-__all__ = ["merge_pallas", "merge_tile_kernel"]
+__all__ = [
+    "merge_pallas",
+    "merge_tile_kernel",
+    "merge_kway_pallas",
+    "merge_kway_tile_kernel",
+]
+
+# JAX 0.4.x names it TPUCompilerParams; newer JAX renamed to CompilerParams.
+_CompilerParams = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
 
 
 def _sentinel(dtype) -> jnp.ndarray:
@@ -185,8 +196,177 @@ def merge_pallas(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((1, total), dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=(dimension_semantics,),
         ),
     )(jb, kb, a_phys, a_phys, b_phys, b_phys)
     return out[0, : m + n]
+
+
+# ---------------------------------------------------------------------------
+# k-way tile kernel: one co-ranked pass over k sorted runs
+# ---------------------------------------------------------------------------
+
+
+def _lane_count_search(win, off, limit, x, le, s: int, width: int | None = None):
+    """Per-lane count of window-segment elements below each query.
+
+    ``win``: ``(1, width)`` staged buffer (default ``width = 2S``); the
+    segment is ``win[off : off + limit]``.  ``x``: ``(1, S)`` per-lane
+    queries.  Counts ``<= x`` when ``le`` else ``< x`` — the Lemma-1
+    side pair.  Branchless binary search, ``ceil(log2 S)+1`` rounds, all
+    lanes at once.
+    """
+    width = 2 * s if width is None else width
+    lo = jnp.zeros_like(x, jnp.int32)
+    hi = jnp.broadcast_to(limit, x.shape).astype(jnp.int32)
+
+    def body(_, lo_hi):
+        lo, hi = lo_hi
+        mid = (lo + hi) // 2
+        v = jnp.take_along_axis(win, jnp.clip(off + mid, 0, width - 1), axis=1)
+        pred = ((v <= x) if le else (v < x)) & (mid < hi)
+        return jnp.where(pred, mid + 1, lo), jnp.where(pred, hi, mid)
+
+    rounds = max(1, (s - 1).bit_length() + 1)
+    lo, _ = lax.fori_loop(0, rounds, body, (lo, hi))
+    return lo
+
+
+def merge_kway_tile_kernel(
+    cb_ref,  # (k, G+1) scalar-prefetch: per-run co-rank boundaries
+    *refs,  # 2k VMEM (1, S) input blocks, then the (1, S) output tile
+    k: int,
+    tile: int,
+):
+    """Merge one output tile of the k-way merge.
+
+    The per-lane search generalises the pairwise tile kernel: first the
+    tile-local merged rank of every staged input element (k-1 co-rank
+    counts per run, vectorised across lanes), then each output lane
+    binary-searches those rank vectors for its cut ``j_q(t)`` and takes
+    the k-finger minimum with run-index tie-break.  No scalar loop over
+    elements ever runs.
+    """
+    s = tile
+    r = pl.program_id(0)
+    out_ref = refs[2 * k]
+    t = lax.broadcasted_iota(jnp.int32, (1, s), 1)  # output lanes 0..S-1
+
+    wins, offs, lens = [], [], []
+    for q in range(k):
+        lo_q, hi_q = cb_ref[q, r], cb_ref[q, r + 1]
+        wins.append(
+            jnp.concatenate([refs[2 * q][...], refs[2 * q + 1][...]], axis=1)
+        )
+        offs.append(lo_q % s)
+        lens.append(hi_q - lo_q)
+
+    # Tile-local merged rank of element (q, u): u + sum over siblings of
+    # the Lemma-1 counts (ties count toward earlier runs).  Ranks of
+    # lanes past the segment are forced to S+u: still increasing, never
+    # below any output lane t < S.
+    u = t  # reuse the iota as per-element index
+    ranks = []
+    for q in range(k):
+        x = jnp.take_along_axis(
+            wins[q], jnp.clip(offs[q] + u, 0, 2 * s - 1), axis=1
+        )
+        cnt = u
+        for qp in range(k):
+            if qp == q:
+                continue
+            cnt = cnt + _lane_count_search(
+                wins[qp], offs[qp], lens[qp], x, le=(qp < q), s=s
+            )
+        ranks.append(jnp.where(u < lens[q], cnt, s + u))
+
+    # Output lane t: j_q(t) = |{u : rank_q[u] < t}| via the same per-lane
+    # count search on the (sorted) rank vector, then the k-finger decision.
+    best_val = best_ok = None
+    for q in range(k):
+        jq = _lane_count_search(
+            ranks[q], jnp.int32(0), jnp.int32(s), t, le=False, s=s, width=s
+        )
+        val = jnp.take_along_axis(
+            wins[q], jnp.clip(offs[q] + jq, 0, 2 * s - 1), axis=1
+        )
+        avail = jq < lens[q]
+        if best_val is None:
+            best_val, best_ok = val, avail
+        else:
+            better = avail & (~best_ok | (val < best_val))
+            best_val = jnp.where(better, val, best_val)
+            best_ok = best_ok | avail
+    out_ref[...] = best_val
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile", "interpret", "dimension_semantics")
+)
+def merge_kway_pallas(
+    runs: jax.Array,
+    *,
+    tile: int = 512,
+    interpret: bool = True,
+    dimension_semantics: str = "arbitrary",
+) -> jax.Array:
+    """Stable merge of ``k`` sorted runs with one Pallas pass.
+
+    Args:
+      runs: ``(k, w)`` array, rows sorted ascending (pad ragged runs
+        with dtype-max sentinels upstream; sentinels merge to the tail).
+      tile: output elements per grid cell (S); multiple of 128 on real
+        TPUs.
+      interpret: run the kernel body in interpret mode (CPU validation).
+      dimension_semantics: grid axis annotation; tiles are independent
+        so 'parallel' is sound.
+
+    The k-way generalisation of ``merge_pallas``: phase 1 cuts all
+    ``G+1`` tile boundaries into every run at once (multi-way co-rank),
+    phase 2 stages two S-blocks per run per tile via scalar-prefetched
+    index maps and merges each tile with a vectorised per-lane k-way
+    search.  ``log2(k)`` pairwise passes collapse into one.
+    """
+    k, w = runs.shape
+    dtype = runs.dtype
+    s = tile
+
+    w2 = -(-max(w, 1) // s) * s
+    runs_log = jnp.concatenate(
+        [runs, jnp.full((k, w2 - w), _sentinel(dtype), dtype)], axis=1
+    )
+    total = k * w2
+    g = total // s
+
+    # Phase 1: multi-way co-rank of the G+1 tile boundaries.
+    bounds = jnp.asarray([r * s for r in range(g + 1)], jnp.int32)
+    cb = co_rank_kway_batch(bounds, runs_log).T  # (k, G+1)
+
+    # Physical padding: two extra S-blocks per run so block q+1 of the
+    # staged window is always in range.
+    runs_phys = jnp.concatenate(
+        [runs_log, jnp.full((k, 2 * s), _sentinel(dtype), dtype)], axis=1
+    )
+
+    def _spec(q: int, plus: int):
+        return pl.BlockSpec(
+            (1, s), lambda r, cb, q=q, plus=plus: (q, cb[q, r] // s + plus)
+        )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(g,),
+        in_specs=[_spec(q, plus) for q in range(k) for plus in (0, 1)],
+        out_specs=pl.BlockSpec((1, s), lambda r, cb: (0, r)),
+    )
+    out = pl.pallas_call(
+        functools.partial(merge_kway_tile_kernel, k=k, tile=s),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, total), dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=(dimension_semantics,),
+        ),
+    )(cb, *([runs_phys] * (2 * k)))
+    return out[0, : k * w]

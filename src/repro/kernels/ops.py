@@ -13,9 +13,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.merge import merge_pallas
+from repro.kernels.merge import merge_kway_pallas, merge_pallas
 
-__all__ = ["stable_merge", "stable_sort", "default_backend"]
+__all__ = [
+    "stable_merge",
+    "stable_merge_kway",
+    "stable_sort",
+    "default_backend",
+]
 
 
 def default_backend() -> str:
@@ -42,6 +47,28 @@ def stable_merge(
         interp = (jax.default_backend() != "tpu") if interpret is None else interpret
         return merge_pallas(a, b, tile=tile, interpret=interp)
     return ref.merge_ref(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "tile", "interpret"))
+def stable_merge_kway(
+    runs: jax.Array,
+    *,
+    backend: str | None = None,
+    tile: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Stable merge of ``k`` sorted runs (``(k, w)``, rows ascending).
+
+    backend: 'pallas' (one-pass k-way tile kernel) or 'xla' (the k-way
+    rank merge from ``repro.core.kway``), None = auto.
+    """
+    from repro.core.kway import merge_kway_ranked
+
+    backend = backend or default_backend()
+    if backend == "pallas":
+        interp = (jax.default_backend() != "tpu") if interpret is None else interpret
+        return merge_kway_pallas(runs, tile=tile, interpret=interp)
+    return merge_kway_ranked(runs)
 
 
 @functools.partial(jax.jit, static_argnames=("backend",))

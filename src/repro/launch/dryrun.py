@@ -65,6 +65,25 @@ GRAD_ACCUM = {
 }
 
 
+def normalize_cost_analysis(cost) -> dict:
+    """Normalise ``compiled.cost_analysis()`` across JAX versions.
+
+    JAX <= 0.4.x returns a *list* with one properties-dict per computation,
+    newer JAX returns the dict directly, and some backends return ``None``.
+    Always returns a flat dict (first computation wins on key collisions).
+    """
+    if cost is None:
+        return {}
+    if isinstance(cost, dict):
+        return dict(cost)
+    merged: dict = {}
+    for entry in cost:
+        if isinstance(entry, dict):
+            for k, v in entry.items():
+                merged.setdefault(k, v)
+    return merged
+
+
 def effective_batch_axes(mesh, batch: int, layout: str = "tp"):
     """Greedy prefix of the DP-capable axes whose product divides the
     batch.  layout='fsdp' adds 'model' to the pool: the model axis stops
@@ -244,7 +263,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
                 compiled = lowered.compile()
                 t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = normalize_cost_analysis(compiled.cost_analysis())
             hlo = compiled.as_text()
             coll = collective_bytes(hlo)
             weighted = hlo_flops_bytes(hlo)
@@ -265,7 +284,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
                 },
                 cost={
                     k: float(v)
-                    for k, v in (cost or {}).items()
+                    for k, v in cost.items()
                     if isinstance(v, (int, float)) and k in (
                         "flops", "transcendentals", "bytes accessed",
                         "bytes accessed output", "optimal_seconds",

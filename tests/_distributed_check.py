@@ -14,7 +14,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.core.compat import shard_map
 
 from repro.core.distributed import (
     distributed_co_rank,

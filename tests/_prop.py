@@ -1,0 +1,108 @@
+"""Property-testing shim: hypothesis when available, seeded fallback offline.
+
+The container has no network, so ``hypothesis`` may be absent.  When it is
+installed, this module re-exports the real ``given``/``settings``/``st`` and
+the property tests run unchanged.  When it is missing, a tiny seeded-random
+engine stands in: each ``@given`` test runs a fixed number of deterministic
+examples drawn from lightweight re-implementations of the handful of
+strategies the suite uses (``integers``, ``floats``, ``lists``,
+``sampled_from``, ``data``).  No shrinking, no database — just enough to keep
+collection green and the properties exercised offline.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # offline fallback
+    import zlib
+
+    import numpy as _np
+
+    HAVE_HYPOTHESIS = False
+
+    # Fallback examples per test: enough to exercise the property without
+    # recompiling jitted functions hundreds of times in a Python loop.
+    _FALLBACK_MAX_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rng):
+            return self._sample(rng)
+
+    class _DataStrategy(_Strategy):
+        """Marker for ``st.data()``; draws happen inside the test body."""
+
+        def __init__(self):
+            super().__init__(lambda rng: _DataObject(rng))
+
+    class _DataObject:
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.sample(self._rng)
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1))
+            )
+
+        @staticmethod
+        def floats(min_value, max_value, **_kwargs):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value))
+            )
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def sample(rng):
+                size = int(rng.integers(min_size, max_size + 1))
+                return [elements.sample(rng) for _ in range(size)]
+
+            return _Strategy(sample)
+
+        @staticmethod
+        def sampled_from(choices):
+            seq = list(choices)
+            return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+        @staticmethod
+        def data():
+            return _DataStrategy()
+
+    st = _St()
+
+    def settings(max_examples=None, deadline=None, **_kwargs):
+        """No-op decorator (example count is fixed in the fallback)."""
+
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            # NOTE: no functools.wraps — pytest must see a zero-arg
+            # signature, not the wrapped one (else params look like
+            # fixtures).
+            def runner():
+                for example in range(_FALLBACK_MAX_EXAMPLES):
+                    # Deterministic per (test, example) so failures replay
+                    # (crc32, not hash(): hash() is salted per process).
+                    seed = zlib.crc32(f"{fn.__name__}:{example}".encode())
+                    rng = _np.random.default_rng(seed)
+                    drawn = [s.sample(rng) for s in strategies]
+                    fn(*drawn)
+
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            return runner
+
+        return deco

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core import co_rank, co_rank_batch
 

@@ -9,6 +9,10 @@ import pathlib
 import subprocess
 import sys
 
+import pytest
+
+pytestmark = pytest.mark.slow  # subprocess run on 8 fake devices
+
 REPO = pathlib.Path(__file__).resolve().parents[1]
 
 

@@ -11,6 +11,10 @@ import pathlib
 import subprocess
 import sys
 
+import pytest
+
+pytestmark = pytest.mark.slow  # subprocess compile on 256 fake devices
+
 REPO = pathlib.Path(__file__).resolve().parents[1]
 
 SCRIPT = r"""

@@ -7,7 +7,7 @@ exactly as written, so correctness here validates the TPU program logic.
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.kernels.merge import merge_pallas
 from repro.kernels.ref import merge_np, merge_ref

@@ -3,7 +3,7 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core import merge_argsort, merge_sort, merge_topk, sort_key_val
 

@@ -16,6 +16,8 @@ from repro.models.transformer import (
     train_loss,
 )
 
+pytestmark = pytest.mark.slow  # full arch sweep: minutes of compile time
+
 SMOKE_SHAPE = ShapeConfig("smoke", seq_len=32, global_batch=2, kind="train")
 
 
