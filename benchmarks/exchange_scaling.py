@@ -1,0 +1,96 @@
+"""Exchange vs allgather scaling on 8 simulated devices.
+
+    PYTHONPATH=src python benchmarks/exchange_scaling.py
+
+For each problem size the two ``sharded_sort`` strategies are timed and
+their compiled HLO is audited for per-device data movement:
+
+* ``allgather`` replicates every run: each device *receives*
+  ``(p-1) * N/p ~ N`` real elements and holds the full ``(p, N/p)``
+  gathered array — per-device memory O(N), independent of p.
+* ``exchange`` ships only the exact output block: each device receives
+  ``N/p`` real elements (perfect balance by construction) plus
+  ``O(p^2 log(N/p))`` int32 splitter metadata — per-device real payload
+  O(N/p).  The static slot buffer is ``(p, capacity)``; its sentinel
+  padding is wire overhead only for peers with skewed segments.
+
+Reported columns: median us/call, then
+``gathered_elems_per_dev / payload_elems_per_dev / max_allgather_elems``
+derived from the HLO (the last column shows the exchange path never
+all-gathers anything value-sized).
+"""
+
+import os
+import pathlib
+import sys
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# runnable both as `python benchmarks/exchange_scaling.py` and `-m`
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from benchmarks.common import row, time_fn
+from repro.core.compat import shard_map
+from repro.distributed import sharded_sort
+from repro.launch.hlo_stats import collective_op_sizes
+
+
+def _max_allgather_elems(txt: str) -> int:
+    """Largest all-gather op output (ops only, not consumers of one)."""
+    sizes = collective_op_sizes(txt, "all-gather")
+    return max((el for _, el in sizes), default=0)
+
+
+def main():
+    devs = jax.devices()
+    p = len(devs)
+    mesh = Mesh(np.array(devs), ("x",))
+    rng = np.random.default_rng(0)
+
+    for log_n in (14, 16, 18, 20):
+        n = 1 << log_n
+        x = jnp.asarray(rng.integers(-(1 << 30), 1 << 30, n), jnp.int32)
+        want = np.sort(np.asarray(x), kind="stable")
+        for strategy in ("allgather", "exchange"):
+            fn = jax.jit(
+                shard_map(
+                    lambda s, st=strategy: sharded_sort(s, "x", strategy=st),
+                    mesh=mesh,
+                    in_specs=(P("x"),),
+                    out_specs=P("x"),
+                )
+            )
+            # compile once: the executable serves the timing loop AND the
+            # HLO audit (lower().compile() twice would double the SPMD
+            # compile cost, the dominant term at the largest sizes)
+            compiled = fn.lower(x).compile()
+            got = np.asarray(compiled(x))
+            np.testing.assert_array_equal(got, want)
+            us = time_fn(compiled, x)
+            max_ag = _max_allgather_elems(compiled.as_text())
+            if strategy == "allgather":
+                gathered = (p - 1) * (n // p)
+                payload = (p - 1) * (n // p)
+            else:
+                gathered = 0
+                payload = n // p
+                assert max_ag < n, (
+                    f"exchange path all-gathered {max_ag} >= N={n} elements"
+                )
+            row(
+                f"sharded_sort_{strategy}_n{n}_p{p}",
+                us,
+                f"gathered/dev={gathered} payload/dev={payload} "
+                f"max_allgather={max_ag}",
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,11 @@
 """Distributed merge/sort on an 8-device host mesh (the shard_map layer).
 
+Demonstrates the ``strategy=`` switch of ``repro.distributed``:
+``allgather`` replicates the runs (O(N) per device), ``corank``
+distributes the partition search, and ``exchange`` ships each device
+exactly its N/p-element block with the splitter-driven balanced
+all_to_all — no replication.
+
     PYTHONPATH=src python examples/distributed_sort.py
 """
 
@@ -17,35 +23,45 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.compat import shard_map
 
-from repro.core.distributed import (
-    distributed_co_rank,
+from repro.distributed import (
     distributed_merge,
-    distributed_sort,
+    sharded_sort,
+    sharded_sort_host,
 )
 
 mesh = Mesh(np.array(jax.devices()), ("x",))
+p = len(jax.devices())
 rng = np.random.default_rng(0)
-m = n = 512 * 8
+m = n = 512 * p
 
 a = np.sort(rng.integers(0, 10_000, m)).astype(np.int32)
 b = np.sort(rng.integers(0, 10_000, n)).astype(np.int32)
+want_merge = np.sort(np.concatenate([a, b]), kind="stable")
 
-merged = jax.jit(
-    shard_map(
-        lambda aa, bb: distributed_merge(aa, bb, "x"),
-        mesh=mesh, in_specs=(P("x"), P("x")), out_specs=P("x"),
-    )
-)(jnp.asarray(a), jnp.asarray(b))
-assert (np.asarray(merged) == np.sort(np.concatenate([a, b]), kind="stable")).all()
-print("distributed merge over 8 devices: ok (each device produced exactly",
-      (m + n) // 8, "elements)")
+for strategy in ("allgather", "corank"):
+    merged = jax.jit(
+        shard_map(
+            lambda aa, bb: distributed_merge(aa, bb, "x", strategy=strategy),
+            mesh=mesh, in_specs=(P("x"), P("x")), out_specs=P("x"),
+        )
+    )(jnp.asarray(a), jnp.asarray(b))
+    assert (np.asarray(merged) == want_merge).all()
+    print(f"distributed merge [{strategy:9s}] over {p} devices: ok "
+          f"(each device produced exactly {(m + n) // p} elements)")
 
-x = rng.integers(-1000, 1000, 8 * 1024).astype(np.int32)
-s = jax.jit(
-    shard_map(
-        lambda xx: distributed_sort(xx, "x"),
-        mesh=mesh, in_specs=(P("x"),), out_specs=P("x"),
-    )
-)(jnp.asarray(x))
-assert (np.asarray(s) == np.sort(x, kind="stable")).all()
-print("distributed sort over 8 devices: ok")
+x = rng.integers(-1000, 1000, p * 1024).astype(np.int32)
+for strategy in ("allgather", "exchange"):
+    s = jax.jit(
+        shard_map(
+            lambda xx: sharded_sort(xx, "x", strategy=strategy),
+            mesh=mesh, in_specs=(P("x"),), out_specs=P("x"),
+        )
+    )(jnp.asarray(x))
+    assert (np.asarray(s) == np.sort(x, kind="stable")).all()
+    print(f"sharded sort    [{strategy:9s}] over {p} devices: ok")
+
+# Uneven / non-power-of-two sizes via the host wrapper's sentinel padding.
+y = rng.normal(size=10_001).astype(np.float32)
+sy = sharded_sort_host(jnp.asarray(y), strategy="exchange")
+assert (np.asarray(sy) == np.sort(y, kind="stable")).all()
+print(f"sharded_sort_host on n={len(y)} (uneven remainder): ok")

@@ -1,13 +1,25 @@
 #!/usr/bin/env bash
 # Tier-1 verification entry point.
 #
-#   scripts/verify.sh          # full tier-1 suite (the ROADMAP command)
-#   scripts/verify.sh --fast   # skip @pytest.mark.slow subprocess tests
+#   scripts/verify.sh                # full tier-1 suite (the ROADMAP command)
+#   scripts/verify.sh --fast         # skip @pytest.mark.slow subprocess tests
+#   scripts/verify.sh --distributed  # shard_map suites on 8 fake host devices
+#                                    # (distributed merge/sort + exchange)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-if [[ "${1:-}" == "--fast" ]]; then
-    exec python -m pytest -q -m "not slow"
-fi
-exec python -m pytest -x -q
+case "${1:-}" in
+    --fast)
+        exec python -m pytest -q -m "not slow"
+        ;;
+    --distributed)
+        # The child processes force 8 host devices themselves; exporting the
+        # flag here also covers any future in-process shard_map tests.
+        export XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}"
+        exec python -m pytest -q tests/test_distributed.py tests/test_exchange.py
+        ;;
+    *)
+        exec python -m pytest -x -q
+        ;;
+esac

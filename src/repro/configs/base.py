@@ -62,6 +62,9 @@ class ModelConfig:
     flash_vjp: bool = False  # flash backward (recompute, no p residuals)
     moe_dispatch_groups: int = 1  # GShard-style local dispatch groups
     use_merge_sort_dispatch: bool = True
+    fanout: int = 0  # merge-sort/top-k fan-out (runs merged per pass);
+    #                  0 = library defaults (mergesort.DEFAULT_FANOUT,
+    #                  topk.TOURNAMENT_FANOUT)
     layout: str = "tp"  # 'tp' (model axis = TP/EP) | 'fsdp' (model axis
     #                     joins the batch axes; weights gathered per layer —
     #                     the right mesh use for sub-4B models, see §Perf)

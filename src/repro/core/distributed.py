@@ -1,238 +1,46 @@
-"""Distributed (multi-device) merge and sort on a shard_map mesh.
+"""Deprecated location — the distributed layer grew into a subsystem.
 
-Three layers, increasingly faithful to the paper's distributed setting
-(cf. Siebert & Träff's MPI companion paper [13]):
+This module used to hold the whole multi-device story in one file; it is
+now a thin re-export of ``repro.distributed`` (splitters / exchange /
+api), kept so existing imports keep working.  The three strategies and
+their memory-traffic trade-offs, in brief (full discussion in
+``repro.distributed.api``):
 
-* ``distributed_merge(strategy='allgather')`` — CREW-PRAM emulation: one
-  ``all_gather`` replicates A and B; every device co-ranks *its own* output
-  block (Algorithm 2 verbatim, device id = processing element id) and
-  merges exactly ``(m+n)/p`` elements.  Right choice when the merged data
-  is consumed device-locally (routing metadata, sampler state).
+* ``allgather`` — replicate the runs (one ``all_gather``, ``O(N)``
+  memory and receive bytes per device), co-rank and merge the local
+  block.  Simplest; caps scaling at single-device memory.
+* ``corank`` — distribute the co-rank *search* (``O(log)`` rounds of
+  ``O(p)``-scalar collectives), still gather the data windows.  Same
+  ``O(N)`` data traffic; proves the search needs no replication.
+* ``exchange`` — distributed k-way splitters (``O(log(N/p))`` rounds,
+  ``O(p^2)`` scalars each) + balanced ``all_to_all`` (each device
+  receives exactly its ``N/p``-element block) + local ragged k-way
+  merge.  ``O(N/p)`` real payload per device; no full-``N``
+  ``all_gather`` of values anywhere.
 
-* ``distributed_co_rank`` — Algorithm 1 executed over collectives *without
-  gathering any array*: each binary-search step performs the two remote
-  reads ``A[j-1]``, ``B[k]`` by publishing the wanted global index
-  (``all_gather`` of p int32) and answering with a masked ``psum`` — the
-  owner contributes the value, everyone else zero.  ``O(log min(m,n))``
-  rounds of ``O(p)``-byte collectives; the paper's synchronization-free
-  claim becomes "p independent searches batched into one SPMD program".
-
-* ``distributed_sort`` — local merge sort, then *exact* global splitters
-  via distributed co-rank on value space, then a capacity-1 ``all_to_all``
-  exchange and a final local multi-run merge.  Because splitters are exact
-  (the paper's perfect balance), every device receives exactly ``N/p``
-  elements — the all_to_all is balanced *by construction*, unlike sample
-  sort's 2x capacity slack.
+New code should import from ``repro.distributed`` directly.
 """
 
-from __future__ import annotations
-
-import functools
-from typing import Literal
-
-import jax
-import jax.numpy as jnp
-from jax import lax
-
-from repro.core.corank import co_rank
-from repro.core.kway import co_rank_kway_batch, merge_kway_ranked
-from repro.core.merge import merge_by_ranking
-from repro.core.mergesort import merge_sort
+from repro.distributed.api import (  # noqa: F401
+    distributed_merge,
+    distributed_merge_corank,
+    distributed_sort,
+    sharded_merge_kway,
+    sharded_sort,
+    sharded_sort_host,
+)
+from repro.distributed.splitters import (  # noqa: F401
+    distributed_co_rank,
+    distributed_co_rank_kway,
+)
 
 __all__ = [
     "distributed_merge",
+    "distributed_merge_corank",
     "distributed_co_rank",
+    "distributed_co_rank_kway",
     "distributed_sort",
+    "sharded_merge_kway",
+    "sharded_sort",
+    "sharded_sort_host",
 ]
-
-
-from repro.core.compat import axis_size as _axis_size  # noqa: E402
-
-
-# ---------------------------------------------------------------------------
-# allgather strategy (CREW emulation)
-# ---------------------------------------------------------------------------
-
-
-def distributed_merge(
-    a_shard: jax.Array,
-    b_shard: jax.Array,
-    axis_name: str,
-    strategy: Literal["allgather"] = "allgather",
-) -> jax.Array:
-    """Stable merge of two sorted, evenly sharded arrays.
-
-    Call inside ``shard_map``.  ``a_shard``/``b_shard`` are this device's
-    contiguous shards; the global arrays are their concatenations in device
-    order.  Returns this device's contiguous shard of the merged output
-    (size ``(m+n)/p``; ``m+n`` must be divisible by ``p`` — framework
-    callers pad with sentinels upstream).
-    """
-    p = _axis_size(axis_name)
-    r = lax.axis_index(axis_name)
-    a = lax.all_gather(a_shard, axis_name, tiled=True)
-    b = lax.all_gather(b_shard, axis_name, tiled=True)
-    m, n = a.shape[0], b.shape[0]
-    total = m + n
-    assert total % p == 0, "pad inputs so p divides m+n"
-    s = total // p
-
-    i_lo = r * s
-    j_lo, k_lo, _ = co_rank(i_lo, a, b)
-    j_hi, k_hi, _ = co_rank(i_lo + s, a, b)
-
-    # Static-size windows of length s cover the exact segments
-    # (la + lb == s).  Out-of-segment lanes are masked to +sentinel so the
-    # first s merged outputs are exactly this block.
-    aw = _window(a, j_lo, j_hi, s)
-    bw = _window(b, k_lo, k_hi, s)
-    return merge_by_ranking(aw, bw)[:s]
-
-
-def _sentinel(dtype):
-    if jnp.issubdtype(dtype, jnp.floating):
-        return jnp.array(jnp.inf, dtype)
-    return jnp.array(jnp.iinfo(dtype).max, dtype)
-
-
-def _window(x: jax.Array, lo, hi, s: int) -> jax.Array:
-    """x[lo:hi] placed at the head of a length-s buffer, tail = sentinel."""
-    n = x.shape[0]
-    xp = jnp.concatenate([x, jnp.full((s,), _sentinel(x.dtype))])
-    w = lax.dynamic_slice(xp, (jnp.minimum(lo, n),), (s,))
-    mask = jnp.arange(s, dtype=jnp.int32) < (hi - lo)
-    return jnp.where(mask, w, _sentinel(x.dtype))
-
-
-# ---------------------------------------------------------------------------
-# fully distributed co-rank (no data movement beyond O(p) scalars/round)
-# ---------------------------------------------------------------------------
-
-
-def _remote_read(shard: jax.Array, gidx: jax.Array, axis_name: str):
-    """Every device reads global element ``gidx`` (its own request) from the
-    sharded array: publish indices, owners answer via masked psum.
-
-    Out-of-range ``gidx`` (sentinel reads A[-1], A[m]) return +/-inf codes
-    handled by the caller; here we clamp and also return validity.
-    """
-    p = _axis_size(axis_name)
-    r = lax.axis_index(axis_name)
-    sz = shard.shape[0]  # local shard size (uniform)
-    wanted = lax.all_gather(gidx, axis_name)  # (p,) every device's request
-    owner = jnp.clip(wanted // sz, 0, p - 1)
-    local = jnp.where(owner == r, wanted - r * sz, 0)
-    vals = shard[jnp.clip(local, 0, sz - 1)]  # (p,) my answers
-    answers = lax.psum(
-        jnp.where(owner == r, vals, jnp.zeros_like(vals)), axis_name
-    )
-    return answers[r]
-
-
-def distributed_co_rank(
-    i: jax.Array, a_shard: jax.Array, b_shard: jax.Array, axis_name: str
-):
-    """Algorithm 1 with remote reads over collectives (per-device rank i).
-
-    Each device searches for the co-ranks of its own ``i``; the p searches
-    run in lock-step rounds (a fixed ``ceil(log2 min(m,n)) + 2`` count so
-    the loop is static).  Returns ``(j, k)`` global co-ranks.
-    """
-    p = _axis_size(axis_name)
-    m = a_shard.shape[0] * p
-    n = b_shard.shape[0] * p
-    i = jnp.asarray(i, jnp.int32)
-
-    j = jnp.minimum(i, m)
-    k = i - j
-    j_low = jnp.maximum(jnp.int32(0), i - n)
-    # k_low is derived from i so its shard_map varying-axes type matches
-    # the loop body's output (i is per-device inside shard_map).
-    k_low = i * 0
-
-    rounds = max(1, min(m, n).bit_length() + 2)
-
-    def body(_, state):
-        j, k, j_low, k_low = state
-        a_jm1 = _remote_read(a_shard, jnp.maximum(j - 1, 0), axis_name)
-        b_k = _remote_read(b_shard, jnp.minimum(k, n - 1), axis_name)
-        b_km1 = _remote_read(b_shard, jnp.maximum(k - 1, 0), axis_name)
-        a_j = _remote_read(a_shard, jnp.minimum(j, m - 1), axis_name)
-
-        fv = (j > 0) & (k < n) & (a_jm1 > b_k)
-        sv = (k > 0) & (j < m) & (b_km1 >= a_j)
-        active = fv | sv
-
-        delta_j = (j - j_low + 1) // 2
-        delta_k = (k - k_low + 1) // 2
-        new_k_low = jnp.where(fv, k, k_low)
-        new_j_low = jnp.where(fv | ~sv, j_low, j)
-        new_j = jnp.where(fv, j - delta_j, jnp.where(sv, j + delta_k, j))
-        new_k = jnp.where(fv, k + delta_j, jnp.where(sv, k - delta_k, k))
-        del active
-        return new_j, new_k, new_j_low, new_k_low
-
-    j, k, _, _ = lax.fori_loop(0, rounds, body, (j, k, j_low, k_low))
-    return j, k
-
-
-def distributed_merge_corank(
-    a_shard: jax.Array, b_shard: jax.Array, axis_name: str
-) -> jax.Array:
-    """Merge with distributed co-rank for the partition (data still fetched
-    with one all_gather for the local windows; the *search* is distributed —
-    this is the faithful [13]-style split of search vs. data movement)."""
-    p = _axis_size(axis_name)
-    r = lax.axis_index(axis_name)
-    m = a_shard.shape[0] * p
-    n = b_shard.shape[0] * p
-    total = m + n
-    s = total // p
-    j_lo, k_lo = distributed_co_rank(r * s, a_shard, b_shard, axis_name)
-    j_hi, k_hi = distributed_co_rank(
-        jnp.minimum((r + 1) * s, total), a_shard, b_shard, axis_name
-    )
-    a = lax.all_gather(a_shard, axis_name, tiled=True)
-    b = lax.all_gather(b_shard, axis_name, tiled=True)
-    aw = _window(a, j_lo, j_hi, s)
-    bw = _window(b, k_lo, k_hi, s)
-    return merge_by_ranking(aw, bw)[:s]
-
-
-# ---------------------------------------------------------------------------
-# distributed sort (local sort + exact splitters + balanced exchange)
-# ---------------------------------------------------------------------------
-
-
-def distributed_sort(x_shard: jax.Array, axis_name: str) -> jax.Array:
-    """Globally stable sort of an evenly sharded array.
-
-    1. local stable merge sort;
-    2. all_gather of locally sorted shards (ring on ICI);
-    3. every device extracts *its exact output block* in ONE step with
-       the multi-way co-rank: the two block bounds are cut into all ``p``
-       sorted runs at once (``repro.core.kway``), and the p segments —
-       whose lengths sum to exactly N/p, perfect balance — are merged
-       locally with the k-way rank merge.  No ``log2(p)`` pairwise merge
-       tree, and each device merges only its own N/p elements instead of
-       materialising the full N-element sort.
-
-    Stability across shards: device order breaks ties (shard d's elements
-    precede shard d+1's equal elements), matching a global stable sort.
-    """
-    p = _axis_size(axis_name)
-    r = lax.axis_index(axis_name)
-    local = merge_sort(x_shard)
-    runs = lax.all_gather(local, axis_name)  # (p, N/p) sorted runs, in order
-    np_, width = runs.shape
-    total = np_ * width
-    s = total // p
-
-    # Both block endpoints cut in one lock-step batched search.
-    cuts = co_rank_kway_batch(jnp.stack([r * s, (r + 1) * s]), runs)
-    lo, hi = cuts[0], cuts[1]  # (p,) cuts of block start / end
-
-    # Per-run windows of static length s (head = real segment, tail =
-    # sentinel); segment lengths hi-lo sum to exactly s.
-    windows = jax.vmap(lambda row, a, b: _window(row, a, b, s))(runs, lo, hi)
-    return merge_kway_ranked(windows, lengths=hi - lo, out_len=s)

@@ -30,6 +30,7 @@ __all__ = [
     "sort_key_val",
     "merge_pairs_ranked",
     "merge_runs_ranked",
+    "sentinel_max",
     "DEFAULT_FANOUT",
 ]
 
@@ -39,10 +40,17 @@ __all__ = [
 DEFAULT_FANOUT = 4
 
 
-def _sentinel_max(dtype) -> jnp.ndarray:
+def sentinel_max(dtype) -> jnp.ndarray:
+    """Order-preserving padding value: sorts after every real element.
+    The single definition every padding site uses (merge sort, Pallas
+    kernels, the distributed exchange) — padding correctness everywhere
+    depends on this exact value."""
     if jnp.issubdtype(dtype, jnp.floating):
         return jnp.array(jnp.inf, dtype)
     return jnp.array(jnp.iinfo(dtype).max, dtype)
+
+
+_sentinel_max = sentinel_max  # internal alias kept for existing callers
 
 
 def merge_runs_ranked(keys: jax.Array, vals: jax.Array | None):
@@ -82,20 +90,29 @@ def _padded_pow2(n: int) -> int:
     return p
 
 
-def _check_fanout(fanout: int):
+def _check_fanout(fanout: int) -> int:
+    """Validate and resolve a fan-out: 0 means 'library default' (the
+    ModelConfig/DataConfig convention), so call sites can pass a config
+    field straight through."""
+    if not fanout:
+        return DEFAULT_FANOUT
     if fanout < 2 or fanout & (fanout - 1):
-        raise ValueError(f"fanout must be a power of two >= 2, got {fanout}")
+        raise ValueError(
+            f"fanout must be a power of two >= 2 (or 0 for the "
+            f"default), got {fanout}"
+        )
+    return fanout
 
 
 def sort_key_val(keys: jax.Array, vals: jax.Array,
                  fanout: int = DEFAULT_FANOUT):
     """Stable sort of ``(keys, vals)`` by ``keys`` (1-D), merge-sort based.
 
-    ``fanout``: runs merged per pass (power of two).  ``fanout=2`` is the
-    paper's pairwise tree; larger fan-outs cut the pass count to
-    ``log_fanout(n)``.
+    ``fanout``: runs merged per pass (power of two; 0 = default).
+    ``fanout=2`` is the paper's pairwise tree; larger fan-outs cut the
+    pass count to ``log_fanout(n)``.
     """
-    _check_fanout(fanout)
+    fanout = _check_fanout(fanout)
     n = keys.shape[0]
     if n <= 1:
         return keys, vals
@@ -117,7 +134,7 @@ def sort_key_val(keys: jax.Array, vals: jax.Array,
 
 def merge_sort(x: jax.Array, fanout: int = DEFAULT_FANOUT) -> jax.Array:
     """Stable merge sort of a 1-D array (k-way bottom-up passes)."""
-    _check_fanout(fanout)
+    fanout = _check_fanout(fanout)
     n = x.shape[0]
     if n <= 1:
         return x

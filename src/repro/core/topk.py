@@ -55,12 +55,15 @@ def _desc_sort_blocks(keys: jax.Array, vals: jax.Array):
 
 @partial(jax.jit, static_argnames=("k", "block", "fanout"))
 def merge_topk(x: jax.Array, k: int, block: int = 128,
-               fanout: int = TOURNAMENT_FANOUT):
+               fanout: int = 0):
     """Top-k of a 1-D array: returns ``(values, indices)`` descending.
 
     Keys are negated so the underlying ascending stable merge yields a
     descending order with ties broken toward the lower index.
+    ``fanout=0`` (the config-field convention) means
+    ``TOURNAMENT_FANOUT``.
     """
+    fanout = fanout or TOURNAMENT_FANOUT
     if fanout < 2:
         raise ValueError(f"fanout must be >= 2, got {fanout}")
     n = x.shape[0]

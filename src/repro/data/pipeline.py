@@ -33,6 +33,7 @@ class DataConfig:
     seed: int = 0
     mean_doc_len: int = 512
     eos: int = 0
+    fanout: int = 0  # length-bucketing merge-sort fan-out; 0 = default
 
 
 def synthetic_doc(dc: DataConfig, epoch: int, idx: int) -> np.ndarray:
@@ -59,10 +60,12 @@ def synthetic_doc(dc: DataConfig, epoch: int, idx: int) -> np.ndarray:
     return out.astype(np.int32)
 
 
-def bucket_by_length(lengths: np.ndarray) -> np.ndarray:
+def bucket_by_length(lengths: np.ndarray, fanout: int = 0) -> np.ndarray:
     """Stable merge-argsort of document lengths (the paper's sort)."""
     keys = jnp.asarray(lengths, jnp.int32)
-    _, order = sort_key_val(keys, jnp.arange(len(lengths), dtype=jnp.int32))
+    _, order = sort_key_val(
+        keys, jnp.arange(len(lengths), dtype=jnp.int32), fanout=fanout
+    )
     return np.asarray(order)
 
 
@@ -106,7 +109,9 @@ def batches(dc: DataConfig, *, rank: int = 0, world: int = 1,
         base = (step % (1 << 20)) * docs_per_step * world
         idxs = [base + rank + world * i for i in range(docs_per_step)]
         docs = [synthetic_doc(dc, epoch, i) for i in idxs]
-        order = bucket_by_length(np.asarray([len(d) for d in docs]))
+        order = bucket_by_length(
+            np.asarray([len(d) for d in docs]), fanout=dc.fanout
+        )
         docs = [docs[i] for i in order]
         tokens, labels, mask = pack_documents(docs, dc)
         yield {

@@ -1,0 +1,51 @@
+"""Sharded exchange subsystem: the paper's merge across the mesh.
+
+The layer between the single-device k-way merge (``repro.core.kway``)
+and the device mesh.  Three modules:
+
+* ``splitters`` — exact global splitters: pairwise and k-way co-rank
+  searches executed over collectives, ``O(p^2)`` scalars per lock-step
+  round, never gathering run data.
+* ``exchange`` — the balanced ``all_to_all`` that ships each device
+  exactly its ``N/p``-element output block (static capacity slots +
+  lengths sideband), and the jit-level ``slot_transpose`` shared with
+  MoE expert-parallel dispatch.
+* ``api`` — ``sharded_sort`` / ``sharded_merge_kway`` /
+  ``distributed_merge`` with the ``strategy=`` switch
+  (``allgather | corank | exchange``) and the host-level padding
+  wrapper.  See ``api``'s docstring for the memory/traffic trade-offs.
+"""
+
+from repro.distributed.api import (
+    distributed_merge,
+    distributed_merge_corank,
+    distributed_sort,
+    sharded_merge_kway,
+    sharded_sort,
+    sharded_sort_host,
+)
+from repro.distributed.exchange import (
+    exchange_block,
+    sentinel_max,
+    slot_transpose,
+    window,
+)
+from repro.distributed.splitters import (
+    distributed_co_rank,
+    distributed_co_rank_kway,
+)
+
+__all__ = [
+    "distributed_merge",
+    "distributed_merge_corank",
+    "distributed_sort",
+    "sharded_merge_kway",
+    "sharded_sort",
+    "sharded_sort_host",
+    "exchange_block",
+    "slot_transpose",
+    "sentinel_max",
+    "window",
+    "distributed_co_rank",
+    "distributed_co_rank_kway",
+]

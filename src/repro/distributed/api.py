@@ -1,0 +1,285 @@
+"""Sharded merge/sort entry points: one ``strategy=`` switch, three ways
+to move (or not move) the data.
+
+All strategies use the *same* exact co-rank partition — every device
+produces exactly its ``N/p``-element output block — and differ only in
+memory and wire traffic:
+
+* ``"allgather"`` — CREW-PRAM emulation: replicate the runs with one
+  ``all_gather`` (``O(N)`` memory and receive traffic per device), then
+  every device co-ranks and merges its block locally.  Right when the
+  merged data is consumed device-locally and ``N/p`` is small (routing
+  metadata, sampler state); caps scaling at what one device can hold.
+
+* ``"corank"`` (pairwise merge only) — the search is distributed
+  (``O(log)`` rounds of ``O(p)``-scalar collectives, nothing gathered
+  during the search), then the data for the local windows is still
+  fetched with one ``all_gather``.  The faithful Siebert-Träff split of
+  search vs. data movement; same ``O(N)`` data traffic as allgather.
+
+* ``"exchange"`` — the no-replication path: distributed k-way co-rank
+  splitters (``O(log(N/p))`` rounds, ``O(p^2)`` scalars each), then a
+  balanced ``all_to_all`` ships each device exactly its block's
+  segments (``O(N/p)`` real payload per device), then one local ragged
+  k-way merge.  Per-device working set is the ``(p, capacity)`` slot
+  buffer — ``O(N/p)`` per peer, no full-``N`` ``all_gather`` of values
+  anywhere in the traced program.
+
+Everything here is SPMD code to be called inside ``shard_map``; the
+``*_host`` wrapper builds the mesh, pads uneven sizes with sentinels and
+strips them again.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.compat import axis_size as _axis_size
+from repro.core.compat import shard_map as _shard_map
+from repro.core.corank import co_rank
+from repro.core.kway import co_rank_kway_batch, merge_kway_ranked
+from repro.core.merge import merge_by_ranking
+from repro.core.mergesort import DEFAULT_FANOUT, merge_sort
+from repro.distributed.exchange import exchange_block, sentinel_max, window
+from repro.distributed.splitters import (
+    distributed_co_rank,
+    distributed_co_rank_kway,
+)
+
+__all__ = [
+    "distributed_merge",
+    "distributed_merge_corank",
+    "distributed_sort",
+    "sharded_merge_kway",
+    "sharded_sort",
+    "sharded_sort_host",
+]
+
+MergeStrategy = Literal["allgather", "corank"]
+SortStrategy = Literal["allgather", "exchange"]
+
+
+# ---------------------------------------------------------------------------
+# pairwise merge (allgather | corank)
+# ---------------------------------------------------------------------------
+
+
+def distributed_merge(
+    a_shard: jax.Array,
+    b_shard: jax.Array,
+    axis_name: str,
+    strategy: MergeStrategy = "allgather",
+) -> jax.Array:
+    """Stable merge of two sorted, evenly sharded arrays.
+
+    Call inside ``shard_map``.  ``a_shard``/``b_shard`` are this device's
+    contiguous shards; the global arrays are their concatenations in
+    device order.  Returns this device's contiguous shard of the merged
+    output (size ``(m+n)/p``; ``m+n`` must be divisible by ``p`` —
+    framework callers pad with sentinels upstream).
+
+    ``strategy="allgather"`` co-ranks on replicated arrays (CREW
+    emulation); ``strategy="corank"`` runs the co-rank search itself over
+    collectives (``distributed_co_rank``) and gathers only for the data
+    windows.  The old ``strategy`` parameter accepted only the literal
+    ``"allgather"``; that single-literal form is deprecated in favour of
+    this switch.
+    """
+    if strategy == "corank":
+        return distributed_merge_corank(a_shard, b_shard, axis_name)
+    if strategy != "allgather":
+        raise ValueError(
+            f"distributed_merge strategy must be 'allgather' or 'corank', "
+            f"got {strategy!r}"
+        )
+    p = _axis_size(axis_name)
+    r = lax.axis_index(axis_name)
+    a = lax.all_gather(a_shard, axis_name, tiled=True)
+    b = lax.all_gather(b_shard, axis_name, tiled=True)
+    m, n = a.shape[0], b.shape[0]
+    total = m + n
+    assert total % p == 0, "pad inputs so p divides m+n"
+    s = total // p
+
+    i_lo = r * s
+    j_lo, k_lo, _ = co_rank(i_lo, a, b)
+    j_hi, k_hi, _ = co_rank(i_lo + s, a, b)
+
+    # Static-size windows of length s cover the exact segments
+    # (la + lb == s).  Out-of-segment lanes are masked to +sentinel so the
+    # first s merged outputs are exactly this block.
+    aw = window(a, j_lo, j_hi, s)
+    bw = window(b, k_lo, k_hi, s)
+    return merge_by_ranking(aw, bw)[:s]
+
+
+def distributed_merge_corank(
+    a_shard: jax.Array, b_shard: jax.Array, axis_name: str
+) -> jax.Array:
+    """Merge with distributed co-rank for the partition (data still fetched
+    with one all_gather for the local windows; the *search* is distributed —
+    this is the faithful [13]-style split of search vs. data movement)."""
+    p = _axis_size(axis_name)
+    r = lax.axis_index(axis_name)
+    m = a_shard.shape[0] * p
+    n = b_shard.shape[0] * p
+    total = m + n
+    s = total // p
+    j_lo, k_lo = distributed_co_rank(r * s, a_shard, b_shard, axis_name)
+    j_hi, k_hi = distributed_co_rank(
+        jnp.minimum((r + 1) * s, total), a_shard, b_shard, axis_name
+    )
+    a = lax.all_gather(a_shard, axis_name, tiled=True)
+    b = lax.all_gather(b_shard, axis_name, tiled=True)
+    aw = window(a, j_lo, j_hi, s)
+    bw = window(b, k_lo, k_hi, s)
+    return merge_by_ranking(aw, bw)[:s]
+
+
+# ---------------------------------------------------------------------------
+# k-way merge / sort (allgather | exchange)
+# ---------------------------------------------------------------------------
+
+
+def sharded_merge_kway(
+    run_shard: jax.Array,
+    axis_name: str,
+    strategy: SortStrategy = "exchange",
+    capacity: int | None = None,
+) -> jax.Array:
+    """Global stable k-way merge of ``p`` sorted runs, one per device.
+
+    Call inside ``shard_map``.  Device ``r`` holds sorted run ``r``
+    (width ``N/p``); returns its contiguous ``N/p``-element block of the
+    global merge (ties break by device order — bit-exact with a global
+    stable sort of the concatenation when the runs are locally sorted
+    shards).
+
+    ``strategy="exchange"`` (default): distributed splitters + balanced
+    ``all_to_all`` + local ragged merge — no run is ever replicated.
+    ``strategy="allgather"``: replicate the runs, cut locally — the old
+    ``distributed_sort`` data path.
+
+    ``capacity`` tunes the exchange's per-peer slot.  The default
+    (``None`` = ``N/p``) is exact for every input.  A smaller capacity
+    trades exactness for memory: any (sender, receiver) segment longer
+    than ``capacity`` is truncated — the dropped elements vanish and the
+    block's tail is zero-filled — acceptable for MoE-style capacity
+    dropping, **incorrect for a sort**.  Only shrink it when segment
+    skew is provably bounded (e.g. keys randomly shuffled across shards,
+    where segments concentrate near ``N/p^2``); the truncation semantics
+    are pinned down in ``tests/_exchange_check.py``.
+    """
+    if strategy not in ("allgather", "exchange"):
+        raise ValueError(
+            f"sharded sort/merge strategy must be 'allgather' or "
+            f"'exchange', got {strategy!r}"
+        )
+    p = _axis_size(axis_name)
+    r = lax.axis_index(axis_name)
+    w = run_shard.shape[0]
+    s = w  # every output block is exactly N/p elements (Proposition 2)
+    bounds = jnp.stack([r * s, (r + 1) * s]).astype(jnp.int32)
+
+    if strategy == "exchange":
+        cuts = distributed_co_rank_kway(bounds, run_shard, axis_name)
+        segments, lengths = exchange_block(
+            run_shard, cuts, axis_name, capacity=capacity
+        )
+        return merge_kway_ranked(segments, lengths=lengths, out_len=s)
+    runs = lax.all_gather(run_shard, axis_name)  # (p, N/p) replicated
+    cuts = co_rank_kway_batch(bounds, runs)  # (2, p) local cuts
+    lo, hi = cuts[0], cuts[1]
+    windows = jax.vmap(lambda row, a, b: window(row, a, b, s))(runs, lo, hi)
+    return merge_kway_ranked(windows, lengths=hi - lo, out_len=s)
+
+
+def sharded_sort(
+    x_shard: jax.Array,
+    axis_name: str,
+    strategy: SortStrategy = "exchange",
+    capacity: int | None = None,
+    fanout: int = DEFAULT_FANOUT,
+) -> jax.Array:
+    """Globally stable sort of an evenly sharded array.
+
+    Local stable merge sort (fan-out ``fanout``), then the strategy's
+    splitter + data-movement path (``sharded_merge_kway``).  Stability
+    across shards: device order breaks ties (shard ``d``'s elements
+    precede shard ``d+1``'s equal elements), matching a global stable
+    sort of the concatenated input.
+    """
+    local = merge_sort(x_shard, fanout=fanout)
+    return sharded_merge_kway(
+        local, axis_name, strategy=strategy, capacity=capacity
+    )
+
+
+def distributed_sort(
+    x_shard: jax.Array,
+    axis_name: str,
+    strategy: SortStrategy = "exchange",
+) -> jax.Array:
+    """Back-compat alias of ``sharded_sort`` (exchange path by default)."""
+    return sharded_sort(x_shard, axis_name, strategy=strategy)
+
+
+# ---------------------------------------------------------------------------
+# host-level wrapper (mesh construction + sentinel padding)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_sort_fn(mesh, axis_name, strategy, capacity):
+    from jax.sharding import PartitionSpec as P
+
+    return jax.jit(
+        _shard_map(
+            lambda s: sharded_sort(
+                s, axis_name, strategy=strategy, capacity=capacity
+            ),
+            mesh=mesh,
+            in_specs=(P(axis_name),),
+            out_specs=P(axis_name),
+        )
+    )
+
+
+def sharded_sort_host(
+    x: jax.Array,
+    strategy: SortStrategy = "exchange",
+    axis_name: str = "x",
+    mesh=None,
+    capacity: int | None = None,
+) -> jax.Array:
+    """Host-callable global stable sort over every visible device.
+
+    Handles what the SPMD core cannot: builds the 1-D mesh, pads
+    non-power-of-two / uneven-remainder sizes to a multiple of ``p`` with
+    order-preserving sentinels (dtype max sorts to the global tail, after
+    every real element — including real dtype-max duplicates, which
+    precede the padding by position), sorts, and strips the pad.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    n = x.shape[0]
+    if mesh is None:
+        mesh = Mesh(np.array(jax.devices()), (axis_name,))
+    p = int(mesh.shape[axis_name])
+    if n == 0 or p == 1:
+        return merge_sort(x)
+    w = -(-n // p)
+    pad = w * p - n
+    xp = (
+        jnp.concatenate([x, jnp.full((pad,), sentinel_max(x.dtype))])
+        if pad
+        else x
+    )
+    out = _sharded_sort_fn(mesh, axis_name, strategy, capacity)(xp)
+    return out[:n]

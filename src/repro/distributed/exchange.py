@@ -1,0 +1,132 @@
+"""Balanced ``all_to_all`` exchange built on exact splitters.
+
+Because the splitters are *exact* co-ranks (the paper's perfect balance),
+every device's output block is exactly ``N/p`` elements — the exchange is
+balanced by construction, unlike sample sort's 2x capacity slack.  What
+is *not* balanced is the per-(sender, receiver) segment: on adversarial
+data (e.g. an already-sorted array) one peer pair can carry a whole
+``N/p`` block while the others carry nothing.  SPMD programs need static
+shapes, so the exchange ships fixed-capacity slots:
+
+* each sender packs, for every peer, a ``(capacity,)`` slot holding the
+  co-rank segment of its run destined for that peer (head = real
+  elements, tail = order-preserving sentinel padding);
+* one ``lax.all_to_all`` transposes the ``(p, capacity)`` slot matrix so
+  receiver ``d`` ends with slot row ``r`` = the segment sent by run
+  ``r`` — rows arrive in device order, which is exactly the k-way merge's
+  tie-break order, so stability and duplicates survive the wire;
+* a ``lengths`` sideband (the receiver's own cut differences — no extra
+  collective) tells the ragged k-way merge where real data ends, so
+  sentinel values that also occur in the payload are never confused with
+  padding.
+
+``capacity`` defaults to the worst-case-safe ``N/p``; callers with
+shuffled data can shrink it (segments truncate like MoE capacity slots —
+same static-slot idiom, same trade-off, see ``slot_transpose``).  Real
+payload received per device is exactly ``N/p`` regardless of capacity —
+the allgather strategy receives ``(p-1) * N/p`` — and a ragged
+``all_to_allv`` (or TPU DMA-with-lengths) would put the wire bytes at
+``N/p`` too; the slot padding is the price of static shapes only.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.compat import axis_size as _axis_size
+from repro.core.mergesort import sentinel_max
+
+__all__ = [
+    "exchange_block",
+    "slot_transpose",
+    "sentinel_max",
+    "window",
+]
+
+
+def window(x: jax.Array, lo, hi, s: int) -> jax.Array:
+    """``x[lo:hi]`` placed at the head of a length-``s`` buffer, tail =
+    sentinel.  ``lo``/``hi`` may be traced; ``hi - lo`` must be ``<= s``
+    for the copy to be lossless."""
+    n = x.shape[0]
+    xp = jnp.concatenate([x, jnp.full((s,), sentinel_max(x.dtype))])
+    w = lax.dynamic_slice(xp, (jnp.minimum(lo, n),), (s,))
+    mask = jnp.arange(s, dtype=jnp.int32) < (hi - lo)
+    return jnp.where(mask, w, sentinel_max(x.dtype))
+
+
+def exchange_block(
+    run_shard: jax.Array,
+    cuts: jax.Array,
+    axis_name: str,
+    capacity: int | None = None,
+):
+    """Ship every device its exact output block's segments.
+
+    Call inside ``shard_map``.  ``cuts`` is this device's ``(2, p)`` cut
+    matrix from ``distributed_co_rank_kway`` — row 0/1 the cut vectors of
+    its block's lower/upper rank.  Device ``r`` must *send* according to
+    everyone else's cuts restricted to run ``r``, so the cut matrices are
+    shared first (one ``all_gather`` of ``2 p^2`` int32 — the only
+    metadata collective the exchange adds).
+
+    Returns ``(segments, lengths)``: ``segments`` is ``(p, capacity)``
+    with row ``src`` = the co-rank segment of run ``src`` belonging to
+    this device's block (head-packed, sentinel tail) and ``lengths`` the
+    ``(p,)`` real segment lengths (``lengths.sum() == block size``, the
+    perfect-balance guarantee).  Feed both to ``merge_kway_ranked`` for
+    the local stable merge.
+
+    ``capacity`` bounds the per-peer slot; ``None`` means the safe
+    ``run_shard.shape[0]`` (= ``N/p``).  A smaller capacity truncates
+    oversized segments — the receiver's ragged merge then drops the
+    missing elements and zero-fills its block tail (MoE-style capacity
+    dropping; wrong for an exact sort — see ``sharded_merge_kway``).
+    Segments exceed ``N/p^2`` only on skewed data; adversarially
+    pre-sorted input drives one segment to the full ``N/p``.
+    """
+    w = run_shard.shape[0]
+    r = lax.axis_index(axis_name)
+    cap = w if capacity is None else int(capacity)
+    cuts = jnp.asarray(cuts, jnp.int32)
+    all_cuts = lax.all_gather(cuts, axis_name)  # (p, 2, p)
+    lo_mine = all_cuts[:, 0, r]  # (p,) each peer's segment bounds in MY run
+    hi_mine = all_cuts[:, 1, r]
+    send = jax.vmap(lambda a, b: window(run_shard, a, b, cap))(
+        lo_mine, hi_mine
+    )  # (p, cap): row d = my segment for peer d
+    segments = lax.all_to_all(
+        send, axis_name, split_axis=0, concat_axis=0, tiled=True
+    )  # (p, cap): row src = run src's segment for me
+    lengths = cuts[1] - cuts[0]  # (p,) sideband: my real segment lengths
+    if capacity is not None:
+        lengths = jnp.minimum(lengths, cap)
+    return segments, lengths
+
+
+def slot_transpose(x: jax.Array, constrain=None, in_spec=None, out_spec=None):
+    """Swap the two leading (peer-group, slot) axes of a capacity-padded
+    dispatch buffer — the jit-level form of the balanced exchange.
+
+    ``exchange_block`` is the explicit-collective form for ``shard_map``
+    code; MoE expert-parallel dispatch lives at jit level where GSPMD
+    inserts collectives, so there the balanced ``all_to_all`` is written
+    as a transpose of ``(groups, experts, capacity, d)`` slots under
+    sharding constraints: with ``groups`` on the batch axes and
+    ``experts`` on the EP axis, the swap below lowers to exactly one
+    all_to_all shipping equal bytes per peer — the same
+    static-capacity-slot idiom, equal-split because capacity is static.
+
+    ``constrain`` is a ``(x, *spec) -> x`` sharding-constraint callable
+    (``repro.models.layers.constrain_spec``); ``in_spec``/``out_spec``
+    are the partition-spec entries before/after the swap.  Pass ``None``
+    to skip constraining (single-device paths).
+    """
+    if constrain is not None and in_spec is not None:
+        x = constrain(x, *in_spec)
+    y = jnp.swapaxes(x, 0, 1)
+    if constrain is not None and out_spec is not None:
+        y = constrain(y, *out_spec)
+    return y

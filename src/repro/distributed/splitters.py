@@ -1,0 +1,208 @@
+"""Distributed co-ranking: exact global splitters over collectives.
+
+The paper's central object — the co-rank of an output rank ``i`` — is a
+pure *search*, so it distributes without moving any run data: every
+remote probe is a value lookup or a ``searchsorted`` count that the run's
+owner can answer locally, and the ``p`` devices' searches advance in
+lock-step rounds of ``O(p^2)``-scalar collectives.
+
+Two searches live here:
+
+* ``distributed_co_rank`` — the pairwise Algorithm 1 (two sorted arrays
+  sharded over the mesh).  Each binary-search step performs its four
+  remote reads by publishing the wanted global indices (``all_gather`` of
+  ``p`` int32) and answering with a masked ``psum`` — the owner
+  contributes the value, everyone else zero.  ``O(log min(m, n))``
+  rounds.
+
+* ``distributed_co_rank_kway`` — the multi-way generalisation: ``p``
+  sorted runs, one per device, and a *batch* of ``B`` output ranks per
+  device (``B = 2`` for a block's two bounds).  All ``p * B`` cut-vector
+  searches resolve together in ``O(log(N/p))`` lock-step rounds.  Per
+  round each device publishes its ``(B, p)`` candidate indices (one
+  ``all_gather``), answers value lookups into its own run (one masked
+  ``psum``), and contributes its Lemma-1 tie-aware ``searchsorted``
+  counts for every candidate value (one more ``psum``) — ``O(p^2 B)``
+  scalars per round, never a single element of run data gathered.
+
+Both return the same cuts as their single-device counterparts
+(``repro.core.corank.co_rank`` / ``repro.core.kway.co_rank_kway``),
+verified element-for-element in ``tests/_exchange_check.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.compat import axis_size as _axis_size
+
+__all__ = [
+    "distributed_co_rank",
+    "distributed_co_rank_kway",
+]
+
+
+# ---------------------------------------------------------------------------
+# pairwise (Algorithm 1 over collectives)
+# ---------------------------------------------------------------------------
+
+
+def _remote_read(shard: jax.Array, gidx: jax.Array, axis_name: str):
+    """Every device reads global element ``gidx`` (its own request) from the
+    sharded array: publish indices, owners answer via masked psum.
+
+    Out-of-range ``gidx`` (sentinel reads A[-1], A[m]) return +/-inf codes
+    handled by the caller; here we clamp and also return validity.
+    """
+    p = _axis_size(axis_name)
+    r = lax.axis_index(axis_name)
+    sz = shard.shape[0]  # local shard size (uniform)
+    wanted = lax.all_gather(gidx, axis_name)  # (p,) every device's request
+    owner = jnp.clip(wanted // sz, 0, p - 1)
+    local = jnp.where(owner == r, wanted - r * sz, 0)
+    vals = shard[jnp.clip(local, 0, sz - 1)]  # (p,) my answers
+    answers = lax.psum(
+        jnp.where(owner == r, vals, jnp.zeros_like(vals)), axis_name
+    )
+    return answers[r]
+
+
+def distributed_co_rank(
+    i: jax.Array, a_shard: jax.Array, b_shard: jax.Array, axis_name: str
+):
+    """Algorithm 1 with remote reads over collectives (per-device rank i).
+
+    Each device searches for the co-ranks of its own ``i``; the p searches
+    run in lock-step rounds (a fixed ``ceil(log2 min(m,n)) + 2`` count so
+    the loop is static).  Returns ``(j, k)`` global co-ranks.
+    """
+    p = _axis_size(axis_name)
+    m = a_shard.shape[0] * p
+    n = b_shard.shape[0] * p
+    i = jnp.asarray(i, jnp.int32)
+
+    j = jnp.minimum(i, m)
+    k = i - j
+    j_low = jnp.maximum(jnp.int32(0), i - n)
+    # k_low is derived from i so its shard_map varying-axes type matches
+    # the loop body's output (i is per-device inside shard_map).
+    k_low = i * 0
+
+    rounds = max(1, min(m, n).bit_length() + 2)
+
+    def body(_, state):
+        j, k, j_low, k_low = state
+        a_jm1 = _remote_read(a_shard, jnp.maximum(j - 1, 0), axis_name)
+        b_k = _remote_read(b_shard, jnp.minimum(k, n - 1), axis_name)
+        b_km1 = _remote_read(b_shard, jnp.maximum(k - 1, 0), axis_name)
+        a_j = _remote_read(a_shard, jnp.minimum(j, m - 1), axis_name)
+
+        fv = (j > 0) & (k < n) & (a_jm1 > b_k)
+        sv = (k > 0) & (j < m) & (b_km1 >= a_j)
+
+        delta_j = (j - j_low + 1) // 2
+        delta_k = (k - k_low + 1) // 2
+        new_k_low = jnp.where(fv, k, k_low)
+        new_j_low = jnp.where(fv | ~sv, j_low, j)
+        new_j = jnp.where(fv, j - delta_j, jnp.where(sv, j + delta_k, j))
+        new_k = jnp.where(fv, k + delta_j, jnp.where(sv, k - delta_k, k))
+        return new_j, new_k, new_j_low, new_k_low
+
+    j, k, _, _ = lax.fori_loop(0, rounds, body, (j, k, j_low, k_low))
+    return j, k
+
+
+# ---------------------------------------------------------------------------
+# k-way (one sorted run per device, batched ranks)
+# ---------------------------------------------------------------------------
+
+
+def distributed_co_rank_kway(
+    i: jax.Array,
+    run_shard: jax.Array,
+    axis_name: str,
+    length: jax.Array | None = None,
+) -> jax.Array:
+    """Cut matrices of output ranks ``i`` into the mesh's ``p`` sorted runs.
+
+    Call inside ``shard_map``.  Device ``r`` holds ``run_shard`` — sorted
+    run ``r`` of the global k-way merge (``k = p``), width ``w`` — and
+    asks for the cut vectors of *its own* ``B`` output ranks ``i``.
+
+    Args:
+      i: ``(B,)`` output ranks of this device (``B`` static, uniform).
+      run_shard: ``(w,)`` this device's sorted run.  Ragged runs must be
+        padded with row-maximal values and declare ``length``.
+      axis_name: mesh axis the runs are sharded over.
+      length: optional scalar count of real elements in ``run_shard``.
+
+    Returns:
+      int32 ``(B, p)``: row ``b`` is the cut vector of rank ``i[b]`` —
+      ``out[b].sum() == min(i[b], total)`` and the stable k-way merge of
+      ``run_r[: out[b, r]]`` over all devices is exactly the first
+      ``i[b]`` elements of the global merge.  Ties break by device order
+      (lower device id first), matching ``co_rank_kway``.
+
+    Every round costs one ``all_gather`` of ``(B, p)`` int32 candidates
+    and two ``psum``s of ``(p, B, p)`` scalars; the round count is the
+    static ``ceil(log2 w) + 1``.  No run element ever leaves its device.
+    """
+    p = _axis_size(axis_name)
+    r = lax.axis_index(axis_name)
+    w = run_shard.shape[0]
+    i = jnp.asarray(i, jnp.int32)
+    b = i.shape[0]
+    run_ids = jnp.arange(p, dtype=jnp.int32)
+    if length is None:
+        lengths = jnp.full((p,), w, jnp.int32)
+    else:
+        lengths = lax.all_gather(
+            jnp.asarray(length, jnp.int32), axis_name
+        )  # (p,)
+
+    def merged_rank(t: jax.Array) -> jax.Array:
+        """rank(r', t[., r']) for this device's candidates ``t`` (B, p)."""
+        # Publish every device's candidate indices: (p, B, p); entry
+        # [d, q, rp] is device d's probe into run rp for its rank i[q].
+        cand = lax.all_gather(t, axis_name)
+        # Owners answer the value lookups: my column rp == r.
+        mine = run_shard[jnp.clip(cand[:, :, r], 0, w - 1)]  # (p, B)
+        vals = lax.psum(
+            jnp.where(
+                run_ids[None, None, :] == r,
+                mine[:, :, None],
+                jnp.zeros((), run_shard.dtype),
+            ),
+            axis_name,
+        )  # (p, B, p): vals[d, q, rp] = run_rp[cand[d, q, rp]]
+        # My Lemma-1 count contribution for every candidate value: runs
+        # before the candidate's own run count ties (<=, side='right'),
+        # runs after it count strictly (<, side='left').
+        flat = vals.reshape(-1)
+        ssl = jnp.searchsorted(run_shard, flat, side="left")
+        ssr = jnp.searchsorted(run_shard, flat, side="right")
+        cnt = jnp.where(
+            r < run_ids[None, None, :],
+            ssr.astype(jnp.int32).reshape(p, b, p),
+            ssl.astype(jnp.int32).reshape(p, b, p),
+        )
+        cnt = jnp.where(r == run_ids[None, None, :], 0, cnt)
+        cnt = jnp.minimum(cnt, lengths[r])  # never count my padding
+        ranks = lax.psum(cnt, axis_name) + cand  # (p, B, p)
+        return ranks[r]  # (B, p) — my own searches
+
+    rounds = max(1, w).bit_length() + 1
+
+    def body(_, lo_hi):
+        lo, hi = lo_hi
+        mid = (lo + hi) // 2
+        pred = (mid < lengths[None, :]) & (merged_rank(mid) < i[:, None])
+        return jnp.where(pred, mid + 1, lo), jnp.where(pred, hi, mid)
+
+    # + i*0 keeps shard_map's varying-axes type aligned with the body.
+    lo = jnp.zeros((b, p), jnp.int32) + i[:, None] * 0
+    hi = jnp.broadcast_to(lengths[None, :], (b, p)) + i[:, None] * 0
+    lo, _ = lax.fori_loop(0, rounds, body, (lo, hi))
+    return lo

@@ -38,6 +38,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.corank import co_rank_batch
 from repro.core.kway import co_rank_kway_batch
+from repro.core.mergesort import sentinel_max as _sentinel
 
 __all__ = [
     "merge_pallas",
@@ -50,12 +51,6 @@ __all__ = [
 _CompilerParams = getattr(
     pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
 )
-
-
-def _sentinel(dtype) -> jnp.ndarray:
-    if jnp.issubdtype(dtype, jnp.floating):
-        return jnp.array(jnp.inf, dtype)
-    return jnp.array(jnp.iinfo(dtype).max, dtype)
 
 
 def merge_tile_kernel(

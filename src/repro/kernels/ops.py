@@ -3,11 +3,22 @@
 Framework code (MoE router, sampler, data pipeline) calls these; the
 backend switch keeps the CPU container, interpret-mode validation and real
 TPU deployment on one code path.
+
+Dispatch policy (ROADMAP item 1's software half): on a TPU backend the
+k-way tile kernel ``merge_kway_pallas`` is preferred automatically; the
+``REPRO_MERGE_BACKEND`` env var (``pallas`` | ``xla`` | ``auto``)
+overrides the choice fleet-wide without code edits, and requesting the
+Pallas path off-TPU falls back to interpret mode — asking for a compiled
+Pallas kernel on a non-TPU backend (``interpret=False``) is an error, not
+a silent mis-dispatch.  The env var is read at trace time: cached
+compilations keyed on ``backend=None`` keep the policy they were traced
+under.
 """
 
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -20,12 +31,42 @@ __all__ = [
     "stable_merge_kway",
     "stable_sort",
     "default_backend",
+    "BACKEND_ENV_VAR",
 ]
+
+BACKEND_ENV_VAR = "REPRO_MERGE_BACKEND"
 
 
 def default_backend() -> str:
-    """'pallas' on TPU, 'xla' elsewhere (CPU/GPU containers)."""
+    """'pallas' on TPU, 'xla' elsewhere; ``REPRO_MERGE_BACKEND`` overrides.
+
+    'xla_native' is also accepted: ``stable_sort`` then uses XLA's own
+    sort (the escape hatch below); the merge entry points treat it as
+    'xla' (they have no native-op equivalent).
+    """
+    env = os.environ.get(BACKEND_ENV_VAR, "auto").strip().lower()
+    if env in ("pallas", "xla", "xla_native"):
+        return env
+    if env not in ("", "auto"):
+        raise ValueError(
+            f"{BACKEND_ENV_VAR} must be 'pallas', 'xla', 'xla_native' or "
+            f"'auto', got {env!r}"
+        )
     return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _resolve_interpret(interpret: bool | None) -> bool:
+    """Interpret-mode fallback: off-TPU the Pallas path must interpret."""
+    on_tpu = jax.default_backend() == "tpu"
+    if interpret is None:
+        return not on_tpu
+    if not interpret and not on_tpu:
+        raise ValueError(
+            "pallas backend with interpret=False requires a TPU backend; "
+            f"running on {jax.default_backend()!r} — drop interpret=False "
+            "or set backend='xla'"
+        )
+    return interpret
 
 
 @functools.partial(jax.jit, static_argnames=("backend", "tile", "interpret"))
@@ -40,12 +81,12 @@ def stable_merge(
     """Stable merge of two ordered 1-D arrays.
 
     backend: 'pallas' (TPU kernel; interpret-mode on CPU), 'xla'
-    (rank-merge via searchsorted — the pure-jnp oracle), or None = auto.
+    (rank-merge via searchsorted — the pure-jnp oracle), or None = auto
+    (``default_backend()``: TPU -> pallas, env-overridable).
     """
     backend = backend or default_backend()
     if backend == "pallas":
-        interp = (jax.default_backend() != "tpu") if interpret is None else interpret
-        return merge_pallas(a, b, tile=tile, interpret=interp)
+        return merge_pallas(a, b, tile=tile, interpret=_resolve_interpret(interpret))
     return ref.merge_ref(a, b)
 
 
@@ -59,15 +100,17 @@ def stable_merge_kway(
 ) -> jax.Array:
     """Stable merge of ``k`` sorted runs (``(k, w)``, rows ascending).
 
-    backend: 'pallas' (one-pass k-way tile kernel) or 'xla' (the k-way
-    rank merge from ``repro.core.kway``), None = auto.
+    backend: 'pallas' (one-pass k-way tile kernel — the preferred TPU
+    path) or 'xla' (the k-way rank merge from ``repro.core.kway``),
+    None = auto.
     """
     from repro.core.kway import merge_kway_ranked
 
     backend = backend or default_backend()
     if backend == "pallas":
-        interp = (jax.default_backend() != "tpu") if interpret is None else interpret
-        return merge_kway_pallas(runs, tile=tile, interpret=interp)
+        return merge_kway_pallas(
+            runs, tile=tile, interpret=_resolve_interpret(interpret)
+        )
     return merge_kway_ranked(runs)
 
 

@@ -311,6 +311,40 @@ def top_traffic(hlo: str, k: int = 15) -> list[tuple[float, str]]:
     return rows[:k]
 
 
+def collective_op_sizes(hlo: str, op: str = "all-gather"):
+    """``(dtype, element_count)`` of every ``op`` output in an HLO dump.
+
+    Matches only real collective ops — the op name directly follows the
+    result shape (``%x = s32[8,2,8]{...} all-gather(...)``); lines that
+    merely *consume* a collective operand (fusions naming
+    ``%all-gather.6``) must not count.  Used by the exchange subsystem's
+    no-replication assertions (tests + benchmarks).
+
+    Tuple-typed results (all-to-all on some backends) report one entry
+    per op: the first component dtype and the summed element count.
+    """
+    pat = re.compile(
+        r"=\s*(\([^)]*\)|\w+\[[\d,]*\](?:\{[^}]*\})?)\s+"
+        + re.escape(op)
+        + r"(?:-start)?\("
+    )
+    out = []
+    for m in pat.finditer(hlo):
+        total, dtype = 0, None
+        for dt, dims in _SHAPE_RE.findall(m.group(1)):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    n *= int(d)
+            total += n
+            dtype = dtype or dt
+        if dtype is not None:
+            out.append((dtype, total))
+    return out
+
+
 def collective_bytes(hlo: str) -> dict:
     """Total collective bytes (trip-count weighted) and per-op breakdown."""
     comps = split_computations(hlo)

@@ -60,9 +60,11 @@ def main(argv=None):
         if args.sampler == "greedy":
             nxt = sample_greedy(logits)
         elif args.sampler == "topk":
-            nxt = sample_topk(sub, logits, k=min(50, cfg.vocab))
+            nxt = sample_topk(sub, logits, k=min(50, cfg.vocab),
+                              fanout=cfg.fanout)
         else:
-            nxt = sample_topp(sub, logits, p=0.9, k=min(64, cfg.vocab))
+            nxt = sample_topp(sub, logits, p=0.9, k=min(64, cfg.vocab),
+                              fanout=cfg.fanout)
         out_tokens.append(np.asarray(nxt))
         logits, cache = step(params, cache, nxt[:, None].astype(jnp.int32))
 

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.exchange import slot_transpose
 from repro.models.layers import truncated_normal
 
 
@@ -195,22 +196,27 @@ def moe_apply(params, x, *, n_experts: int, top_k: int, capacity_factor: float,
             )[0]
         )(xg, wg, eg)  # (G, E, Cg, d)
         # group dim lives on the batch axes; expert dim on the EP axis —
-        # this transpose IS the all_to_all.
+        # the slot transpose IS the balanced all_to_all (equal bytes per
+        # peer because capacity is static), shared with the exchange
+        # subsystem's sort path.
         ba = L.get_batch_axes()
-        if ba is not None:
-            ex_in = L.constrain_spec(ex_in, ba, None, None, None)
-        ex_g = jnp.swapaxes(ex_in, 0, 1)  # (E, G, Cg, d)
-        if ba is not None:
-            ex_g = L.constrain_spec(ex_g, "model", ba, None, None)
+        constrain = L.constrain_spec if ba is not None else None
+        ex_g = slot_transpose(  # (E, G, Cg, d)
+            ex_in,
+            constrain=constrain,
+            in_spec=(ba, None, None, None),
+            out_spec=("model", ba, None, None),
+        )
         gate = jnp.einsum("egcd,edf->egcf", ex_g, params["w_gate"].astype(x.dtype))
         up = jnp.einsum("egcd,edf->egcf", ex_g, params["w_up"].astype(x.dtype))
         h = jax.nn.silu(gate) * up
         ex_out = jnp.einsum("egcf,efd->egcd", h, params["w_down"].astype(x.dtype))
-        if ba is not None:
-            ex_out = L.constrain_spec(ex_out, "model", ba, None, None)
-        ex_out = jnp.swapaxes(ex_out, 0, 1)  # (G, E, Cg, d)
-        if ba is not None:
-            ex_out = L.constrain_spec(ex_out, ba, None, None, None)
+        ex_out = slot_transpose(  # (G, E, Cg, d)
+            ex_out,
+            constrain=constrain,
+            in_spec=("model", ba, None, None),
+            out_spec=(ba, None, None, None),
+        )
 
         # re-run dispatch bookkeeping per group to combine (cheap ints)
         def one_combine(xt_g, w_g, e_g, exo_g):

@@ -4,6 +4,10 @@ top-k uses the merge-based tournament top-k; top-p (nucleus) sorts the
 kept logits with the stable merge sort, so equal logits resolve toward the
 lower token id — deterministic tie-breaking across compilations, which
 lexicographic float sorts do not guarantee.
+
+``fanout`` (candidate lists merged per tournament round) threads down
+from ``ModelConfig.fanout`` so serving sweeps can tune the fan-out>2
+path end-to-end; 0 picks the library default.
 """
 
 from __future__ import annotations
@@ -13,16 +17,16 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.mergesort import sort_key_val
 from repro.core.topk import merge_topk
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
-def sample_topk(key, logits, k: int = 50, temperature: float = 1.0):
+@functools.partial(jax.jit, static_argnames=("k", "fanout"))
+def sample_topk(key, logits, k: int = 50, temperature: float = 1.0,
+                fanout: int = 0):
     """logits: (b, vocab) -> token ids (b,) sampled from the top-k set."""
 
     def one(key_i, row):
-        vals, idx = merge_topk(row, k)
+        vals, idx = merge_topk(row, k, fanout=fanout)
         probs = jax.nn.softmax(vals.astype(jnp.float32) / temperature)
         choice = jax.random.categorical(key_i, jnp.log(probs + 1e-20))
         return idx[choice]
@@ -31,13 +35,14 @@ def sample_topk(key, logits, k: int = 50, temperature: float = 1.0):
     return jax.vmap(one)(keys, logits)
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
+@functools.partial(jax.jit, static_argnames=("k", "fanout"))
 def sample_topp(key, logits, p: float = 0.9, k: int = 256,
-                temperature: float = 1.0):
+                temperature: float = 1.0, fanout: int = 0):
     """Nucleus sampling over merge-sorted top-k candidates."""
 
     def one(key_i, row):
-        vals, idx = merge_topk(row, k)  # descending, stable
+        # descending, stable
+        vals, idx = merge_topk(row, k, fanout=fanout)
         probs = jax.nn.softmax(vals.astype(jnp.float32) / temperature)
         cum = jnp.cumsum(probs)
         keep = cum - probs < p  # first token always kept

@@ -19,7 +19,6 @@ from repro.core.compat import shard_map
 from repro.core.distributed import (
     distributed_co_rank,
     distributed_merge,
-    distributed_merge_corank,
     distributed_sort,
 )
 from repro.core.corank import co_rank
@@ -67,16 +66,16 @@ def main():
         )
     print("distributed_co_rank: OK")
 
-    # --- merge with distributed co-rank partition ------------------------
+    # --- merge with distributed co-rank partition (strategy switch) ------
     fn3 = shard_map(
-        lambda a_, b_: distributed_merge_corank(a_, b_, "x"),
+        lambda a_, b_: distributed_merge(a_, b_, "x", strategy="corank"),
         mesh=mesh,
         in_specs=(P("x"), P("x")),
         out_specs=P("x"),
     )
     got3 = np.asarray(jax.jit(fn3)(jnp.asarray(a), jnp.asarray(b)))
     np.testing.assert_array_equal(got3, want)
-    print("distributed_merge_corank: OK")
+    print("distributed_merge strategy=corank: OK")
 
     # --- distributed_sort -------------------------------------------------
     x = rng.integers(-50, 50, 128 * p).astype(np.int32)

@@ -1,0 +1,295 @@
+"""Exchange-subsystem checks, run in a subprocess with 8 fake host devices.
+
+Invoked by tests/test_exchange.py; exits nonzero on any failure.  Covers
+the acceptance criteria of the sharded exchange subsystem:
+
+* distributed k-way splitters == single-device ``co_rank_kway_batch``;
+* ``sharded_sort(strategy='exchange')`` bit-exact with a global stable
+  sort, including duplicate tie-breaking by device order (verified on the
+  full argsort *permutation*, carried through the exchange as a payload);
+* duplicate-heavy inputs and real dtype-max values coexisting with the
+  sentinel padding;
+* non-power-of-two / uneven-remainder sizes via the host wrapper;
+* HLO inspection: the exchange path contains **no** full-N all-gather of
+  values — only O(p^2) int32 metadata collectives and the balanced
+  all-to-all — while the allgather strategy (positive control) does.
+"""
+
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.compat import shard_map
+from repro.core.kway import co_rank_kway_batch, merge_kway_ranked
+from repro.launch.hlo_stats import collective_op_sizes
+from repro.core.mergesort import sort_key_val
+from repro.distributed import (
+    distributed_co_rank_kway,
+    exchange_block,
+    sharded_sort,
+    sharded_sort_host,
+)
+
+SWEEP = "--sweep" in sys.argv[1:]
+
+
+def check_splitters(mesh, p, rng):
+    """Distributed k-way co-rank == the single-device oracle."""
+    for w, lo_v, hi_v in [(64, 0, 50), (128, -3, 3), (32, 0, 2)]:
+        x = rng.integers(lo_v, hi_v + 1, p * w).astype(np.int32)
+        runs = np.sort(x.reshape(p, w), axis=1)
+
+        def spl(run_shard):
+            r = jax.lax.axis_index("x")
+            i = jnp.stack([r * w, (r + 1) * w]).astype(jnp.int32)
+            return distributed_co_rank_kway(i, run_shard[0], "x")[None]
+
+        fn = shard_map(spl, mesh=mesh, in_specs=(P("x"),), out_specs=P("x"))
+        cuts = np.asarray(jax.jit(fn)(jnp.asarray(runs)))
+        want = np.asarray(
+            co_rank_kway_batch(jnp.arange(p + 1) * w, jnp.asarray(runs))
+        )
+        for d in range(p):
+            np.testing.assert_array_equal(cuts[d, 0], want[d])
+            np.testing.assert_array_equal(cuts[d, 1], want[d + 1])
+        assert cuts[:, 1].sum(axis=1).tolist() == [
+            (d + 1) * w for d in range(p)
+        ], "cut vectors must sum to the exact block bound (perfect balance)"
+
+    # ragged runs: per-device real lengths, rows padded with dtype max,
+    # the documented `length` sideband of distributed_co_rank_kway
+    w = 48
+    lens = rng.integers(1, w + 1, p).astype(np.int32)
+    runs = np.full((p, w), np.iinfo(np.int32).max, np.int32)
+    for d in range(p):
+        runs[d, : lens[d]] = np.sort(rng.integers(0, 20, lens[d]))
+    total = int(lens.sum())
+    step = total // p
+
+    def spl_ragged(run_shard, len_shard):
+        r = jax.lax.axis_index("x")
+        i = jnp.stack(
+            [r * step, jnp.minimum((r + 1) * step, total)]
+        ).astype(jnp.int32)
+        return distributed_co_rank_kway(
+            i, run_shard[0], "x", length=len_shard[0]
+        )[None]
+
+    fn = shard_map(
+        spl_ragged, mesh=mesh, in_specs=(P("x"), P("x")), out_specs=P("x")
+    )
+    cuts = np.asarray(jax.jit(fn)(jnp.asarray(runs), jnp.asarray(lens)))
+    bounds = np.array(
+        [min(d * step, total) for d in range(p)]
+        + [min(p * step, total)]
+    )
+    want = np.asarray(
+        co_rank_kway_batch(
+            jnp.asarray(bounds), jnp.asarray(runs), jnp.asarray(lens)
+        )
+    )
+    for d in range(p):
+        np.testing.assert_array_equal(cuts[d, 0], want[d])
+        np.testing.assert_array_equal(cuts[d, 1], want[d + 1])
+        assert cuts[d, 1].sum() == min((d + 1) * step, total)
+    print("splitters vs co_rank_kway_batch (uniform + ragged): OK")
+
+
+def _argsort_exchange(mesh, p, x):
+    """Full stable argsort through the exchange: the index payload rides
+    a second exchange_block, so the permutation itself crosses the wire
+    — duplicates that lose their tie-break would be visible here."""
+    w = len(x) // p
+
+    def body(x_shard):
+        x_shard = x_shard.reshape(-1)
+        r = jax.lax.axis_index("x")
+        gidx = r * w + jnp.arange(w, dtype=jnp.int32)
+        keys, idx = sort_key_val(x_shard, gidx)
+        bounds = jnp.stack([r * w, (r + 1) * w]).astype(jnp.int32)
+        cuts = distributed_co_rank_kway(bounds, keys, "x")
+        seg_k, lengths = exchange_block(keys, cuts, "x")
+        seg_i, _ = exchange_block(idx, cuts, "x")
+        out_k, out_i = merge_kway_ranked(
+            seg_k, vals=seg_i, lengths=lengths, out_len=w
+        )
+        return jnp.stack([out_k, out_i])[None]
+
+    fn = shard_map(body, mesh=mesh, in_specs=(P("x"),), out_specs=P("x"))
+    out = np.asarray(jax.jit(fn)(jnp.asarray(x)))  # (p, 2, w)
+    return out[:, 0].reshape(-1), out[:, 1].reshape(-1)
+
+
+def check_stability(mesh, p, rng):
+    """Bit-exact vs numpy's stable sort INCLUDING the permutation."""
+    n = p * 256
+    for name, x in [
+        ("duplicate-heavy int", rng.integers(-4, 4, n).astype(np.int32)),
+        ("few distinct", rng.integers(0, 2, n).astype(np.int32)),
+        (
+            "dtype-max collisions",
+            np.where(
+                rng.random(n) < 0.3,
+                np.iinfo(np.int32).max,
+                rng.integers(0, 10, n),
+            ).astype(np.int32),
+        ),
+    ]:
+        keys, perm = _argsort_exchange(mesh, p, x)
+        np.testing.assert_array_equal(keys, np.sort(x, kind="stable"))
+        np.testing.assert_array_equal(
+            perm, np.argsort(x, kind="stable").astype(np.int32),
+            err_msg=name,
+        )
+        print(f"exchange stability [{name}]: OK")
+
+
+def check_sort_strategies(mesh, p, rng):
+    """allgather and exchange agree with numpy and each other."""
+    sizes = [(p * 64,), (p * 512,)] + ([(p * 2048,)] if SWEEP else [])
+    for (n,) in sizes:
+        for dtype, gen in [
+            (np.int32, lambda: rng.integers(-50, 50, n)),
+            (np.float32, lambda: rng.normal(size=n)),
+        ]:
+            x = gen().astype(dtype)
+            want = np.sort(x, kind="stable")
+            for strategy in ("allgather", "exchange"):
+                fn = shard_map(
+                    lambda s, st=strategy: sharded_sort(s, "x", strategy=st),
+                    mesh=mesh,
+                    in_specs=(P("x"),),
+                    out_specs=P("x"),
+                )
+                got = np.asarray(jax.jit(fn)(jnp.asarray(x)))
+                np.testing.assert_array_equal(got, want, err_msg=strategy)
+        print(f"sharded_sort strategies agree (n={n}): OK")
+
+
+def check_uneven(mesh, p, rng):
+    """Non-power-of-two / uneven-remainder sizes via sentinel padding."""
+    sizes = [7, p - 1, p + 1, 777, 1000, 4097]
+    for n in sizes:
+        x = rng.integers(-9, 9, n).astype(np.int32)
+        got = np.asarray(
+            sharded_sort_host(jnp.asarray(x), strategy="exchange", mesh=mesh)
+        )
+        np.testing.assert_array_equal(got, np.sort(x, kind="stable"))
+        # real dtype-max values must survive next to the padding sentinel
+        y = np.where(
+            rng.random(n) < 0.5, np.iinfo(np.int32).max, 0
+        ).astype(np.int32)
+        got = np.asarray(
+            sharded_sort_host(jnp.asarray(y), strategy="exchange", mesh=mesh)
+        )
+        np.testing.assert_array_equal(got, np.sort(y, kind="stable"))
+    print(f"uneven sizes {sizes} via sharded_sort_host: OK")
+
+
+def _hlo_allgather_sizes(txt):
+    """Element counts of every all-gather op output in an HLO dump."""
+    return collective_op_sizes(txt, "all-gather")
+
+
+def check_capacity_semantics(mesh, p):
+    """Default capacity is exact even on adversarial (pre-sorted) data,
+    where one (sender, receiver) segment is a whole N/p block; an
+    undersized capacity truncates to sentinels (documented MoE-style
+    dropping), it must never corrupt ordering silently."""
+    w = 128
+    x = np.arange(p * w, dtype=np.int32)  # pre-sorted: maximal skew
+
+    def run(capacity):
+        fn = shard_map(
+            lambda s: sharded_sort(
+                s, "x", strategy="exchange", capacity=capacity
+            ),
+            mesh=mesh,
+            in_specs=(P("x"),),
+            out_specs=P("x"),
+        )
+        return np.asarray(jax.jit(fn)(jnp.asarray(x)))
+
+    np.testing.assert_array_equal(run(None), x)  # default: exact
+    np.testing.assert_array_equal(run(w), x)  # explicit N/p: exact
+    # Undersized capacity: each block keeps its first `capacity` elements
+    # in order and zero-fills the dropped tail (MoE-style capacity drop).
+    truncated = run(w // 2).reshape(p, w)
+    want = np.zeros((p, w), np.int32)
+    want[:, : w // 2] = (
+        np.arange(p, dtype=np.int32)[:, None] * w
+        + np.arange(w // 2, dtype=np.int32)[None, :]
+    )
+    np.testing.assert_array_equal(truncated, want)
+    print("capacity semantics (exact default, documented truncation): OK")
+
+
+def check_hlo_no_replication(mesh, p):
+    """The traced exchange program never all-gathers the values."""
+    n = p * 1024
+
+    def lower(strategy):
+        fn = shard_map(
+            lambda s: sharded_sort(s, "x", strategy=strategy),
+            mesh=mesh,
+            in_specs=(P("x"),),
+            out_specs=P("x"),
+        )
+        return (
+            jax.jit(fn)
+            .lower(jax.ShapeDtypeStruct((n,), jnp.int32))
+            .compile()
+            .as_text()
+        )
+
+    ex = lower("exchange")
+    ex_sizes = _hlo_allgather_sizes(ex)
+    assert all(el < n for _, el in ex_sizes), (
+        f"exchange path must not all-gather anything N-sized: {ex_sizes}"
+    )
+    # metadata collectives are O(p^2) int32 scalars
+    assert all(el <= 4 * p * p for _, el in ex_sizes), ex_sizes
+    a2a = collective_op_sizes(ex, "all-to-all")
+    assert a2a, "exchange path must use all_to_all"
+    assert max(el for _, el in a2a) <= n, (
+        f"the balanced all_to_all moves at most the (p, N/p) slots: {a2a}"
+    )
+
+    ag = lower("allgather")
+    ag_sizes = _hlo_allgather_sizes(ag)
+    assert any(el >= n for _, el in ag_sizes), (
+        f"positive control: allgather path should gather N values: {ag_sizes}"
+    )
+    print(
+        f"HLO: exchange all-gathers {ex_sizes} (all < N={n}), "
+        f"allgather strategy gathers {max(el for _, el in ag_sizes)}: OK"
+    )
+
+
+def main():
+    devs = jax.devices()
+    assert len(devs) == 8, devs
+    p = 8
+    mesh = Mesh(np.array(devs), ("x",))
+    rng = np.random.default_rng(0)
+
+    check_splitters(mesh, p, rng)
+    check_stability(mesh, p, rng)
+    check_sort_strategies(mesh, p, rng)
+    check_uneven(mesh, p, rng)
+    check_capacity_semantics(mesh, p)
+    check_hlo_no_replication(mesh, p)
+    print("ALL OK")
+
+
+if __name__ == "__main__":
+    main()

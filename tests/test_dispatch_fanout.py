@@ -1,0 +1,137 @@
+"""Single-device tests for the kernel dispatch policy, the fanout
+plumbing, and the exchange subsystem's host-facing surfaces."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.kway import merge_kway_ranked
+from repro.data.pipeline import DataConfig, bucket_by_length
+from repro.distributed import slot_transpose
+from repro.distributed.api import distributed_merge, sharded_merge_kway
+from repro.kernels import ops
+from repro.serving.sampling import sample_topk, sample_topp
+
+
+# --- kernels/ops.py dispatch policy ----------------------------------------
+
+
+def test_default_backend_auto_matches_platform():
+    want = "pallas" if jax.default_backend() == "tpu" else "xla"
+    assert ops.default_backend() == want
+
+
+def test_backend_env_override(monkeypatch):
+    monkeypatch.setenv(ops.BACKEND_ENV_VAR, "pallas")
+    assert ops.default_backend() == "pallas"
+    monkeypatch.setenv(ops.BACKEND_ENV_VAR, "xla")
+    assert ops.default_backend() == "xla"
+    monkeypatch.setenv(ops.BACKEND_ENV_VAR, "AUTO")
+    assert ops.default_backend() in ("pallas", "xla")
+    # the stable_sort escape hatch is reachable through the env too
+    monkeypatch.setenv(ops.BACKEND_ENV_VAR, "xla_native")
+    assert ops.default_backend() == "xla_native"
+    monkeypatch.setenv(ops.BACKEND_ENV_VAR, "cuda")
+    with pytest.raises(ValueError, match="REPRO_MERGE_BACKEND"):
+        ops.default_backend()
+
+
+def test_pallas_backend_interpret_fallback():
+    """Off-TPU, backend='pallas' silently interprets; explicitly asking
+    for a compiled kernel (interpret=False) is an error, not a
+    mis-dispatch."""
+    runs = jnp.sort(
+        jnp.arange(4 * 256, dtype=jnp.int32).reshape(4, 256) % 97, axis=1
+    )
+    want = np.sort(np.asarray(runs).reshape(-1), kind="stable")
+    got = ops.stable_merge_kway(runs, backend="pallas", tile=256)
+    np.testing.assert_array_equal(np.asarray(got), want)
+    if jax.default_backend() != "tpu":
+        with pytest.raises(ValueError, match="interpret"):
+            ops.stable_merge_kway(
+                runs, backend="pallas", tile=256, interpret=False
+            )
+
+
+# --- fanout plumbing --------------------------------------------------------
+
+
+def test_model_config_has_fanout_default_zero():
+    cfg = ModelConfig(
+        name="t", family="dense", n_layers=1, d_model=8, n_heads=2,
+        n_kv_heads=2, d_ff=16, vocab=32,
+    )
+    assert cfg.fanout == 0
+
+
+@pytest.mark.parametrize("fanout", [0, 2, 4, 8])
+def test_sample_topk_fanout_invariant(fanout):
+    key = jax.random.key(0)
+    logits = jax.random.normal(jax.random.key(1), (3, 128))
+    base = sample_topk(key, logits, k=16)
+    got = sample_topk(key, logits, k=16, fanout=fanout)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(got))
+
+
+@pytest.mark.parametrize("fanout", [0, 2, 8])
+def test_sample_topp_fanout_invariant(fanout):
+    key = jax.random.key(2)
+    logits = jax.random.normal(jax.random.key(3), (2, 128))
+    base = sample_topp(key, logits, p=0.9, k=32)
+    got = sample_topp(key, logits, p=0.9, k=32, fanout=fanout)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(got))
+
+
+def test_bucket_by_length_fanout_invariant():
+    rng = np.random.default_rng(0)
+    lengths = rng.integers(1, 100, 257)
+    base = bucket_by_length(lengths)
+    for fanout in (2, 4, 8):
+        np.testing.assert_array_equal(
+            base, bucket_by_length(lengths, fanout=fanout)
+        )
+    assert DataConfig(vocab=8, seq_len=16, batch=1, fanout=2).fanout == 2
+
+
+# --- exchange subsystem surfaces -------------------------------------------
+
+
+def test_strategy_validation_errors():
+    a = jnp.arange(8)
+    with pytest.raises(ValueError, match="allgather"):
+        distributed_merge(a, a, "x", strategy="bogus")
+    with pytest.raises(ValueError, match="exchange"):
+        sharded_merge_kway(a, "x", strategy="bogus")
+
+
+def test_slot_transpose_roundtrip():
+    x = jnp.arange(2 * 3 * 4 * 5, dtype=jnp.float32).reshape(2, 3, 4, 5)
+    y = slot_transpose(x)
+    assert y.shape == (3, 2, 4, 5)
+    np.testing.assert_array_equal(
+        np.asarray(slot_transpose(y)), np.asarray(x)
+    )
+
+
+def test_merge_kway_ranked_lengths_sideband_matches_exchange_layout():
+    """The receiver-side ragged merge: head-packed segments + sentinel
+    tails + lengths sideband reproduce the stable merge of the real
+    elements (dtype-max values included)."""
+    rng = np.random.default_rng(1)
+    p, cap = 4, 16
+    segs = np.full((p, cap), np.iinfo(np.int32).max, np.int32)
+    lengths = np.array([16, 0, 7, 9])
+    parts = []
+    for r in range(p):
+        seg = np.sort(rng.integers(0, 5, lengths[r])).astype(np.int32)
+        segs[r, : lengths[r]] = seg
+        parts.append(seg)
+    want = np.sort(np.concatenate(parts), kind="stable")
+    got = merge_kway_ranked(
+        jnp.asarray(segs),
+        lengths=jnp.asarray(lengths),
+        out_len=int(lengths.sum()),
+    )
+    np.testing.assert_array_equal(np.asarray(got), want)

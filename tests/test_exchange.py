@@ -1,0 +1,45 @@
+"""Sharded exchange subsystem tests (subprocess: 8 fake host devices).
+
+The main pytest process must keep a single device (smoke tests and
+benchmarks expect it), so the 8-device runs happen in child processes —
+mirroring tests/test_distributed.py.  ``scripts/verify.sh --distributed``
+runs this file (and the distributed suite) explicitly.
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _run(script: str, *args: str):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tests" / script), *args],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=1800,
+    )
+    assert proc.returncode == 0, (
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    )
+    return proc.stdout
+
+
+@pytest.mark.slow  # subprocess run on 8 fake devices
+def test_exchange_eight_devices():
+    out = _run("_exchange_check.py")
+    assert "ALL OK" in out
+    assert "HLO: exchange all-gathers" in out
+
+
+@pytest.mark.slow  # widest shape sweep: the long lane of the exchange suite
+def test_exchange_eight_devices_sweep():
+    out = _run("_exchange_check.py", "--sweep")
+    assert "ALL OK" in out
