@@ -15,6 +15,8 @@ Derived column: million elements sorted (or merged) per second.
 
 from __future__ import annotations
 
+import json
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -24,8 +26,12 @@ from repro.core.kway import merge_kway_ranked
 from repro.core.mergesort import merge_runs_ranked, sort_key_val
 
 
-def main():
+def main(json_path: str | None = None):
     rng = np.random.default_rng(7)
+    records: list[dict] = []
+
+    def rec(name: str, us: float, **extra):
+        records.append({"name": name, "us_per_call": us, **extra})
 
     # --- full sorts: fanout sweep vs pairwise vs jnp.sort ---------------
     for size in (1 << 16, 1 << 18, 1 << 20):
@@ -49,9 +55,13 @@ def main():
             else:
                 tag += f";vs_pairwise={base_us / us:.2f}x"
             row(f"kway_sort/fanout{fanout}/{size}", us, tag)
+            rec(f"kway_sort/fanout{fanout}/{size}", us,
+                melem_per_s=size / us, fanout=fanout, size=size)
 
         us = time_fn(jax.jit(lambda k: jnp.sort(k, stable=True)), keys)
         row(f"kway_sort/xla_native/{size}", us, meps(us))
+        rec(f"kway_sort/xla_native/{size}", us,
+            melem_per_s=size / us, size=size)
 
     # --- standalone k-run merge: one k-way pass vs pairwise fold --------
     for k, w in ((4, 1 << 16), (8, 1 << 15), (16, 1 << 14)):
@@ -76,6 +86,10 @@ def main():
             f"{total / us_k:.1f}Melem/s;vs_pairwise={us_p / us_k:.2f}x")
         row(f"kway_merge/pairwise_tree/{k}x{w}", us_p,
             f"{total / us_p:.1f}Melem/s")
+        rec(f"kway_merge/kway/{k}x{w}", us_k, melem_per_s=total / us_k,
+            k=k, width=w, vs_pairwise=us_p / us_k)
+        rec(f"kway_merge/pairwise_tree/{k}x{w}", us_p,
+            melem_per_s=total / us_p, k=k, width=w)
 
     # Pallas interpret mode is Python-speed; report once, small size.
     from repro.kernels.merge import merge_kway_pallas
@@ -86,7 +100,15 @@ def main():
     us = time_fn(lambda r: merge_kway_pallas(r, tile=512), runs)
     row(f"kway_merge/pallas_interpret/4x{1 << 10}", us,
         f"{(4 << 10) / us:.2f}Melem/s")
+    rec(f"kway_merge/pallas_interpret/4x{1 << 10}", us,
+        melem_per_s=(4 << 10) / us)
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"records": records}, f, indent=2, sort_keys=True)
+        print(f"# wrote {json_path}", flush=True)
+    return records
 
 
 if __name__ == "__main__":
-    main()
+    main("BENCH_kway.json")

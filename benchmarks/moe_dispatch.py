@@ -1,13 +1,19 @@
 """Framework benchmark — MoE token dispatch: stable merge sort vs
-alternatives, plus determinism and drop-fairness checks.
+alternatives, determinism/drop-fairness checks, and the capacity vs
+dropless trajectory (time, drop rate, per-device payload) across routing
+skews.
 
 This is the paper *inside* the framework: the dispatch plan is a stable
 sort of (token, expert) assignments; we compare against (a) XLA's native
 stable argsort and (b) the lexicographic 64-bit key workaround that
-unstable sorts force.
+unstable sorts force.  The capacity-vs-dropless sweep is the first perf
+trajectory for the dropless refactor — ``main(json_path=...)`` writes
+the machine-readable baseline later PRs have to beat.
 """
 
 from __future__ import annotations
+
+import json
 
 import numpy as np
 import jax
@@ -15,25 +21,55 @@ import jax.numpy as jnp
 
 from benchmarks.common import row, time_fn
 from repro.core.mergesort import sort_key_val
-from repro.models.moe import moe_dispatch
+from repro.models.moe import (
+    _dispatch_combine_one_group,
+    _dropless_moe,
+    moe_dispatch,
+)
+
+# EP mesh size the payload model assumes (contiguous expert ownership,
+# ceil(E/p) experts per device) — matches the 8-device subprocess tests.
+EP_DEVICES = 8
 
 
-def main():
-    rng = np.random.default_rng(4)
-    t, k, e = 16384, 4, 16  # dbrx-like tile of tokens
+def _routing(pattern: str, rng, t: int, k: int, e: int) -> np.ndarray:
+    """(t, k) expert choices for one skew pattern."""
+    if pattern == "uniform":
+        return rng.integers(0, e, (t, k))
+    if pattern == "skewed":
+        # zipf-ish popularity: expert e with weight 1/(e+1)
+        probs = 1.0 / np.arange(1, e + 1)
+        probs /= probs.sum()
+        return rng.choice(e, size=(t, k), p=probs)
+    if pattern == "one_hot":
+        return np.zeros((t, k), np.int64)  # adversarial: everything -> 0
+    raise ValueError(pattern)
+
+
+def _payload_rows(counts: np.ndarray, capacity: int | None, e: int) -> int:
+    """Max rows any EP device receives: its full slot block under
+    capacity dispatch (shipped regardless of fill), or the sum of its
+    owned experts' real segment sizes under dropless / exact cuts."""
+    e_per = -(-e // EP_DEVICES)
+    if capacity is not None:
+        return capacity * e_per
+    return max(
+        int(counts[dev * e_per : (dev + 1) * e_per].sum())
+        for dev in range(EP_DEVICES)
+    )
+
+
+def _sort_comparison(rng, t: int, k: int, e: int) -> None:
     experts = jnp.asarray(rng.integers(0, e, (t, k)), jnp.int32)
     flat = experts.reshape(-1)
     idx = jnp.arange(t * k, dtype=jnp.int32)
 
-    us = time_fn(
-        jax.jit(lambda f, i: sort_key_val(f, i)[1]), flat, idx
-    )
+    us = time_fn(jax.jit(lambda f, i: sort_key_val(f, i)[1]), flat, idx)
     row(f"moe_dispatch/merge_sort/T{t}k{k}", us, "stable=True;key_bytes=4")
 
-    us2 = time_fn(
-        jax.jit(lambda f: jnp.argsort(f, stable=True)), flat
-    )
-    row(f"moe_dispatch/xla_stable_argsort/T{t}k{k}", us2, "stable=True;key_bytes=4")
+    us2 = time_fn(jax.jit(lambda f: jnp.argsort(f, stable=True)), flat)
+    row(f"moe_dispatch/xla_stable_argsort/T{t}k{k}", us2,
+        "stable=True;key_bytes=4")
 
     # lexicographic 64-bit workaround (what unstable sorts force)
     us3 = time_fn(
@@ -45,32 +81,101 @@ def main():
         flat,
         idx,
     )
-    row(f"moe_dispatch/lexicographic64/T{t}k{k}", us3, "stable=via-widening;key_bytes=8")
+    row(f"moe_dispatch/lexicographic64/T{t}k{k}", us3,
+        "stable=via-widening;key_bytes=8")
 
     # semantic checks: determinism + fair (positional) capacity drops
     cap = t * k // e // 2  # force drops
     s1 = moe_dispatch(experts, e, cap, use_merge_sort=True)
     s2 = moe_dispatch(experts, e, cap, use_merge_sort=True)
-    same = all(
-        bool(jnp.array_equal(x, y)) for x, y in zip(s1, s2)
-    )
+    same = all(bool(jnp.array_equal(x, y)) for x, y in zip(s1, s2))
+    assert same, "moe_dispatch is nondeterministic across two calls"
     sorted_e, slot_token, _, slot_pos, keep = s1
-    # within every expert, kept tokens are exactly the earliest ones
-    fair = True
-    se, st_, sp, kp = map(np.asarray, (sorted_e, slot_token, slot_pos, keep))
+    se, st_, kp = map(np.asarray, (sorted_e, slot_token, keep))
     for ex in range(e):
-        seg = st_[se == ex]
-        kept = kp[se == ex]
+        seg, kept = st_[se == ex], kp[se == ex]
         if kept.any() and (~kept).any():
-            fair &= seg[kept].max() < seg[~kept].min() or bool(
-                (np.sort(seg[kept]) == seg[kept]).all()
+            # strict earliest-kept: every kept token must precede every
+            # dropped token of the same expert — positional fairness.
+            assert seg[kept].max() < seg[~kept].min(), (
+                f"unfair capacity drop for expert {ex}: kept token "
+                f"{seg[kept].max()} after dropped token {seg[~kept].min()}"
             )
-    row(
-        f"moe_dispatch/semantics/T{t}k{k}",
-        0.0,
-        f"deterministic={same};drops_positional={bool(fair)}",
-    )
+    row(f"moe_dispatch/semantics/T{t}k{k}", 0.0,
+        "deterministic=True;drops_positional=True")
+
+
+def main(json_path: str | None = None):
+    rng = np.random.default_rng(4)
+    t, k, e = 16384, 4, 16  # dbrx-like tile of tokens
+    _sort_comparison(rng, t, k, e)
+
+    # --- capacity vs dropless trajectory across routing skews -----------
+    d, ff = 256, 512
+    tb = 2048  # smaller token tile so the dense layer timing stays short
+    cap_factor = 1.25
+    capacity = max(int(np.ceil(tb * k / e * cap_factor)), k)
+    params = {
+        "w_gate": jnp.asarray(rng.standard_normal((e, d, ff)), jnp.float32),
+        "w_up": jnp.asarray(rng.standard_normal((e, d, ff)), jnp.float32),
+        "w_down": jnp.asarray(rng.standard_normal((e, ff, d)), jnp.float32),
+    }
+    x = jnp.asarray(rng.standard_normal((1, tb, d)), jnp.float32)
+
+    results: dict = {
+        "config": {"tokens": tb, "top_k": k, "n_experts": e, "d_model": d,
+                   "moe_ff": ff, "capacity_factor": cap_factor,
+                   "capacity": capacity, "ep_devices": EP_DEVICES},
+        "patterns": {},
+    }
+    xt = x.reshape(tb, d)
+    w_uniform = jnp.full((tb, k), 1.0 / k, jnp.float32)
+
+    def cap_ffn(px, wx, ex):
+        ex_in, combine = _dispatch_combine_one_group(
+            px, wx, ex, e, k, capacity, True
+        )
+        gate = jnp.einsum("ecd,edf->ecf", ex_in, params["w_gate"])
+        up = jnp.einsum("ecd,edf->ecf", ex_in, params["w_up"])
+        h = jax.nn.silu(gate) * up
+        return combine(jnp.einsum("ecf,efd->ecd", h, params["w_down"]))
+
+    def drop_ffn(px, wx, ex):
+        return _dropless_moe(params, px, wx, ex, e, k, True)
+
+    for pattern in ("uniform", "skewed", "one_hot"):
+        experts = _routing(pattern, rng, tb, k, e)
+        ex = jnp.asarray(experts, jnp.int32)
+
+        # time the dispatch + expert-FFN + combine core on the real
+        # routing pattern (routing itself is identical work in both paths
+        # and is excluded so the trajectory isolates dispatch cost).
+        us_cap = time_fn(jax.jit(cap_ffn), xt, w_uniform, ex)
+        us_drop = time_fn(jax.jit(drop_ffn), xt, w_uniform, ex)
+
+        counts = np.bincount(experts.reshape(-1), minlength=e)
+        dropped = int(np.maximum(counts - capacity, 0).sum())
+        drop_rate = dropped / (tb * k)
+        pay_cap = _payload_rows(counts, capacity, e)
+        pay_drop = _payload_rows(counts, None, e)
+
+        results["patterns"][pattern] = {
+            "capacity": {"layer_us": us_cap, "drop_rate": drop_rate,
+                         "max_device_payload_rows": pay_cap},
+            "dropless": {"layer_us": us_drop, "drop_rate": 0.0,
+                         "max_device_payload_rows": pay_drop},
+        }
+        row(f"moe_dispatch/capacity/{pattern}/T{tb}k{k}", us_cap,
+            f"drop_rate={drop_rate:.4f};payload_rows={pay_cap}")
+        row(f"moe_dispatch/dropless/{pattern}/T{tb}k{k}", us_drop,
+            f"drop_rate=0.0000;payload_rows={pay_drop}")
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+        print(f"# wrote {json_path}", flush=True)
+    return results
 
 
 if __name__ == "__main__":
-    main()
+    main("BENCH_moe.json")

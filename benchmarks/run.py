@@ -2,17 +2,23 @@
 
 One section per paper claim/table (DESIGN.md §1, §9) plus the framework
 benchmarks and the roofline report.  Prints ``name,us_per_call,derived``
-CSV rows.
+CSV rows and writes the machine-readable baselines ``BENCH_moe.json``
+(capacity vs dropless dispatch trajectory) and ``BENCH_kway.json``
+(fan-out / k-way merge throughput) for later PRs to beat.
 """
 
 from __future__ import annotations
 
 import sys
 
+MOE_JSON = "BENCH_moe.json"
+KWAY_JSON = "BENCH_kway.json"
+
 
 def main() -> None:
     from benchmarks import (
         corank_bound,
+        kway_throughput,
         load_balance,
         merge_throughput,
         moe_dispatch,
@@ -26,7 +32,10 @@ def main() -> None:
         ("C2: load balance vs classic partition (Prop 2)", load_balance.main),
         ("C3: stability at zero cost", stability_cost.main),
         ("C4: merge throughput vs baselines", merge_throughput.main),
-        ("F1: MoE dispatch (framework integration)", moe_dispatch.main),
+        ("C7: k-way fan-out throughput",
+         lambda: kway_throughput.main(KWAY_JSON)),
+        ("F1: MoE dispatch (framework integration)",
+         lambda: moe_dispatch.main(MOE_JSON)),
         ("G: roofline from dry-run artifacts", roofline.main),
     ]
     failures = 0

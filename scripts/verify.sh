@@ -5,6 +5,8 @@
 #   scripts/verify.sh --fast         # skip @pytest.mark.slow subprocess tests
 #   scripts/verify.sh --distributed  # shard_map suites on 8 fake host devices
 #                                    # (distributed merge/sort + exchange)
+#   scripts/verify.sh --moe          # dropless dispatch: 8-device subprocess
+#                                    # sweeps + single-device semantic checks
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -18,6 +20,10 @@ case "${1:-}" in
         # flag here also covers any future in-process shard_map tests.
         export XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}"
         exec python -m pytest -q tests/test_distributed.py tests/test_exchange.py
+        ;;
+    --moe)
+        export XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}"
+        exec python -m pytest -q tests/test_moe_dropless.py tests/test_moe_dispatch.py
         ;;
     *)
         exec python -m pytest -x -q

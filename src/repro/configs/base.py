@@ -61,6 +61,8 @@ class ModelConfig:
     causal_skip: bool = False
     flash_vjp: bool = False  # flash backward (recompute, no p residuals)
     moe_dispatch_groups: int = 1  # GShard-style local dispatch groups
+    moe_dispatch: str = "capacity"  # capacity (fixed slots, drops) |
+    #                                 dropless (exact-cut grouped GEMMs)
     use_merge_sort_dispatch: bool = True
     fanout: int = 0  # merge-sort/top-k fan-out (runs merged per pass);
     #                  0 = library defaults (mergesort.DEFAULT_FANOUT,

@@ -16,4 +16,5 @@ CONFIG = ModelConfig(
     moe_top_k=4,
     moe_ff=10752,
     rope_theta=5e5,
+    moe_dispatch="dropless",  # 16-way top-4 routing skews hard; exact cuts
 )

@@ -29,4 +29,6 @@ CONFIG = ModelConfig(
     v_head_dim=128,
     adam_dtype="bfloat16",
     param_dtype="bfloat16",
+    moe_dispatch="dropless",  # 256 fine-grained experts: capacity slots
+    #                           waste ~E/k x memory; exact cuts don't
 )

@@ -1,15 +1,18 @@
 """Sharded exchange subsystem: the paper's merge across the mesh.
 
 The layer between the single-device k-way merge (``repro.core.kway``)
-and the device mesh.  Three modules:
+and the device mesh.  Four modules:
 
 * ``splitters`` — exact global splitters: pairwise and k-way co-rank
   searches executed over collectives, ``O(p^2)`` scalars per lock-step
   round, never gathering run data.
-* ``exchange`` — the balanced ``all_to_all`` that ships each device
-  exactly its ``N/p``-element output block (static capacity slots +
-  lengths sideband), and the jit-level ``slot_transpose`` shared with
-  MoE expert-parallel dispatch.
+* ``exchange`` — ``balanced_exchange``, the ragged slot ``all_to_all``
+  with an exact lengths sideband that ships each device exactly its
+  segments; ``slot_transpose`` (jit-level MoE capacity dispatch) is its
+  static-shape special case.
+* ``moe`` — dropless expert-parallel dispatch: stable sort by expert
+  id + ``distributed_segment_cuts`` + ``balanced_exchange`` + grouped
+  GEMMs, zero drops and zero wasted slots at any routing skew.
 * ``api`` — ``sharded_sort`` / ``sharded_merge_kway`` /
   ``distributed_merge`` with the ``strategy=`` switch
   (``allgather | corank | exchange``) and the host-level padding
@@ -25,14 +28,23 @@ from repro.distributed.api import (
     sharded_sort_host,
 )
 from repro.distributed.exchange import (
+    balanced_exchange,
     exchange_block,
     sentinel_max,
     slot_transpose,
     window,
+    window_rows,
 )
 from repro.distributed.splitters import (
     distributed_co_rank,
     distributed_co_rank_kway,
+    distributed_segment_cuts,
+)
+from repro.distributed.moe import (
+    DroplessPlan,
+    dropless_combine,
+    dropless_dispatch,
+    dropless_moe_ffn,
 )
 
 __all__ = [
@@ -42,10 +54,17 @@ __all__ = [
     "sharded_merge_kway",
     "sharded_sort",
     "sharded_sort_host",
+    "balanced_exchange",
     "exchange_block",
     "slot_transpose",
     "sentinel_max",
     "window",
+    "window_rows",
     "distributed_co_rank",
     "distributed_co_rank_kway",
+    "distributed_segment_cuts",
+    "DroplessPlan",
+    "dropless_combine",
+    "dropless_dispatch",
+    "dropless_moe_ffn",
 ]

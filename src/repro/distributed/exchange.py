@@ -35,14 +35,15 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.compat import axis_size as _axis_size
 from repro.core.mergesort import sentinel_max
 
 __all__ = [
+    "balanced_exchange",
     "exchange_block",
     "slot_transpose",
     "sentinel_max",
     "window",
+    "window_rows",
 ]
 
 
@@ -55,6 +56,88 @@ def window(x: jax.Array, lo, hi, s: int) -> jax.Array:
     w = lax.dynamic_slice(xp, (jnp.minimum(lo, n),), (s,))
     mask = jnp.arange(s, dtype=jnp.int32) < (hi - lo)
     return jnp.where(mask, w, sentinel_max(x.dtype))
+
+
+def window_rows(x: jax.Array, lo, hi, s: int) -> jax.Array:
+    """Rows ``x[lo:hi]`` head-packed into a ``(s, d)`` buffer, tail
+    zero-filled.  The payload analogue of ``window`` (keys get the
+    order-preserving sentinel; payload rows past the segment are dead and
+    zeros keep them inert under scatter-add combines)."""
+    n, d = x.shape
+    xp = jnp.concatenate([x, jnp.zeros((s, d), x.dtype)])
+    w = lax.dynamic_slice(xp, (jnp.minimum(lo, n), 0), (s, d))
+    mask = jnp.arange(s, dtype=jnp.int32) < (hi - lo)
+    return jnp.where(mask[:, None], w, jnp.zeros((), x.dtype))
+
+
+def balanced_exchange(
+    send: jax.Array,
+    lengths: jax.Array | None = None,
+    *,
+    axis_name: str | None = None,
+    constrain=None,
+    in_spec=None,
+    out_spec=None,
+):
+    """Ragged balanced ``all_to_all``: slots + an exact lengths sideband.
+
+    The one exchange primitive every dispatch path shares.  ``send`` is a
+    ``(p, capacity, ...)`` slot buffer — row ``d`` head-packed with
+    ``lengths[d]`` real elements destined for peer ``d`` (tail =
+    padding).  Returns ``(recv, recv_lengths)``: ``recv`` row ``src`` is
+    the segment peer ``src`` sent to this device (head-packed, same
+    capacity), ``recv_lengths`` the transposed sideband — receiver
+    ``r``'s entry ``src`` is exactly sender ``src``'s ``lengths[r]``, so
+    raggedness is *accounted*, never inferred: real payload ends where
+    the sideband says, and sentinel values occurring in the payload are
+    never confused with padding.  The wire cost of the sideband is ``p``
+    int32 — ``O(p^2)`` scalars mesh-wide, the same metadata class as the
+    splitters.
+
+    ``lengths=None`` is the static-shape special case — every slot is
+    taken to be full, no sideband travels, and ``recv_lengths`` is
+    ``None``.  That case is exactly ``slot_transpose``: the MoE
+    capacity-slot dispatch is this exchange with the raggedness
+    forfeited (truncate/pad to ``capacity``), the dropless dispatch is
+    the same exchange keeping it.
+
+    Two forms, selected by ``axis_name``:
+
+    * ``axis_name`` given — explicit-collective form for ``shard_map``
+      code: one ``lax.all_to_all`` for the slots (+ one for the
+      sideband).
+    * ``axis_name=None`` — jit-level GSPMD form: the exchange is written
+      as a swap of the two leading (peer-group, slot) axes under
+      ``constrain``/``in_spec``/``out_spec`` sharding constraints, which
+      lowers to one all_to_all of equal bytes per peer (no sideband —
+      jit-level callers are the static-shape case).
+    """
+    if axis_name is None:
+        if lengths is not None:
+            raise ValueError(
+                "balanced_exchange: the ragged form (lengths sideband) "
+                "needs explicit collectives — call it inside shard_map "
+                "with axis_name"
+            )
+        if constrain is not None and in_spec is not None:
+            send = constrain(send, *in_spec)
+        recv = jnp.swapaxes(send, 0, 1)
+        if constrain is not None and out_spec is not None:
+            recv = constrain(recv, *out_spec)
+        return recv, None
+    recv = lax.all_to_all(
+        send, axis_name, split_axis=0, concat_axis=0, tiled=True
+    )
+    recv_lengths = None
+    if lengths is not None:
+        recv_lengths = lax.all_to_all(
+            jnp.asarray(lengths, jnp.int32),
+            axis_name,
+            split_axis=0,
+            concat_axis=0,
+            tiled=True,
+        )
+    return recv, recv_lengths
 
 
 def exchange_block(
@@ -97,12 +180,14 @@ def exchange_block(
     send = jax.vmap(lambda a, b: window(run_shard, a, b, cap))(
         lo_mine, hi_mine
     )  # (p, cap): row d = my segment for peer d
-    segments = lax.all_to_all(
-        send, axis_name, split_axis=0, concat_axis=0, tiled=True
+    # Wire sideband: sender r's entry d is cuts_d[1, r] - cuts_d[0, r], so
+    # after the exchange receiver d's entry r equals its own
+    # cuts[1, r] - cuts[0, r] — the sideband and the receiver-local cut
+    # differences provably agree (asserted in tests/_exchange_check.py).
+    send_lengths = jnp.minimum(hi_mine - lo_mine, cap)
+    segments, lengths = balanced_exchange(
+        send, send_lengths, axis_name=axis_name
     )  # (p, cap): row src = run src's segment for me
-    lengths = cuts[1] - cuts[0]  # (p,) sideband: my real segment lengths
-    if capacity is not None:
-        lengths = jnp.minimum(lengths, cap)
     return segments, lengths
 
 
@@ -124,9 +209,7 @@ def slot_transpose(x: jax.Array, constrain=None, in_spec=None, out_spec=None):
     are the partition-spec entries before/after the swap.  Pass ``None``
     to skip constraining (single-device paths).
     """
-    if constrain is not None and in_spec is not None:
-        x = constrain(x, *in_spec)
-    y = jnp.swapaxes(x, 0, 1)
-    if constrain is not None and out_spec is not None:
-        y = constrain(y, *out_spec)
-    return y
+    recv, _ = balanced_exchange(
+        x, constrain=constrain, in_spec=in_spec, out_spec=out_spec
+    )
+    return recv

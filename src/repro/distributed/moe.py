@@ -1,0 +1,287 @@
+"""Dropless expert-parallel MoE dispatch on exact segment cuts.
+
+The capacity-factor dispatch in ``repro.models.moe`` over-provisions:
+every expert gets a fixed ``ceil(T k / E * f)`` slot block and tokens
+beyond it are dropped — correctness traded for static shapes twice over
+(wasted slots *and* lost tokens, both worst at exactly the routing skew
+MoE training produces).  The paper's co-rank machinery removes the
+trade: the stable sort by expert id makes per-expert segments
+contiguous, ``distributed_segment_cuts`` resolves every global segment
+boundary in one ``O(p E)``-scalar collective round, and the ragged
+``balanced_exchange`` ships exactly those segments with a lengths
+sideband.  No token is dropped and no slot is wasted at *any* skew.
+
+Shapes are still static — that is non-negotiable under SPMD — so the
+exchange ships ``(p, capacity)`` slots.  ``capacity=None`` defaults to
+the worst-case-safe local assignment count ``n = t_loc * top_k`` (all of
+a device's tokens routed to one peer's experts), which guarantees zero
+drops unconditionally; an explicit smaller ``capacity`` trades memory
+for *accounted* truncation: the cut matrix says exactly how many
+assignments each peer planned to send, the sideband says how many
+arrived, and the difference is the drop count — detected, never silent.
+The slot tail is padding on the wire only; the grouped GEMM's
+``group_sizes`` stop at the real rows, so no FLOPs are wasted on it.
+
+Pipeline (each device, inside ``shard_map`` over ``axis_name``):
+
+1. stable-sort the flat ``(t_loc * k,)`` expert ids (merge sort — ties
+   keep token order, so the whole pipeline is deterministic);
+2. ``distributed_segment_cuts`` → the replicated ``(p, E + 1)`` cut
+   matrix = the complete send/receive schedule;
+3. slice my run at the expert-ownership boundaries (expert ``e`` lives
+   on device ``e // ceil(E/p)``) and ``balanced_exchange`` the segments
+   with their lengths sideband;
+4. ``merge_kway_ranked`` the ``p`` received sorted runs — device order
+   is the stable tie-break, so the grouped rows are the *globally*
+   stable (expert, device, position) order;
+5. grouped GEMMs over the merged rows with per-expert ``group_sizes``
+   computed from the received runs (exact under truncation);
+6. combine: reverse the exchange (the slot ``all_to_all`` is an
+   involution), gather each assignment's result from its
+   ``(owner, position)`` slot, weight, and scatter-add back to tokens
+   through the *unique* sorted-assignment indices — the same reduction
+   order as a dense reference, hence bit-exact against it.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.compat import axis_size as _axis_size
+from repro.core.kway import merge_kway_ranked
+from repro.distributed.exchange import balanced_exchange, window, window_rows
+from repro.distributed.splitters import distributed_segment_cuts
+
+__all__ = [
+    "DroplessPlan",
+    "dropless_dispatch",
+    "dropless_combine",
+    "dropless_moe_ffn",
+]
+
+
+class DroplessPlan(NamedTuple):
+    """Everything ``dropless_combine`` and the drop accounting need.
+
+    ``xg``/``group_sizes`` feed the grouped GEMMs; the rest reverses the
+    exchange.  ``planned - recv_lengths`` (both per source device) is the
+    exact per-peer drop count — zero when ``capacity`` was ``None``.
+    """
+
+    xg: jax.Array  # (p * cap, d) rows grouped by owned expert
+    group_sizes: jax.Array  # (e_per,) rows per owned expert (sum = real rows)
+    perm: jax.Array  # (p * cap,) merged position -> recv slot row
+    valid: jax.Array  # (p * cap,) bool, real (non-padding) merged rows
+    recv_lengths: jax.Array  # (p,) real rows received per source device
+    planned: jax.Array  # (p,) rows each source planned to send me (cuts)
+    send_lo: jax.Array  # (p,) my sorted run's segment start per peer
+    send_lengths: jax.Array  # (p,) segment lengths actually sent (clipped)
+    sorted_e: jax.Array  # (n,) my expert ids, stable-sorted
+    sorted_idx: jax.Array  # (n,) my assignment index (token * k + choice)
+
+
+def _expert_ownership(n_experts: int, p: int):
+    """Static contiguous expert -> device map: ``e_per = ceil(E/p)``
+    experts per device, boundaries clipped to ``E`` (trailing devices may
+    own fewer, never zero GEMM groups — ``group_sizes`` handles it)."""
+    e_per = -(-n_experts // p)
+    owner_bounds = jnp.minimum(
+        jnp.arange(p + 1, dtype=jnp.int32) * e_per, n_experts
+    )
+    return e_per, owner_bounds
+
+
+def dropless_dispatch(
+    xt: jax.Array,
+    experts: jax.Array,
+    n_experts: int,
+    axis_name: str,
+    capacity: int | None = None,
+    *,
+    use_merge_sort: bool = True,
+) -> DroplessPlan:
+    """Exact-cut dispatch of this device's tokens to expert owners.
+
+    Call inside ``shard_map``.  ``xt`` is ``(t_loc, d)`` local tokens,
+    ``experts`` ``(t_loc, k)`` routing choices.  Returns a
+    :class:`DroplessPlan` whose ``xg`` rows are this device's *received*
+    assignments grouped by owned expert, ready for grouped GEMMs with
+    ``group_sizes``.
+
+    ``capacity=None`` uses the worst-case-safe per-peer slot
+    ``n = t_loc * k`` (zero drops at any skew); smaller values truncate
+    each (sender, owner) segment earliest-kept, with the exact overflow
+    visible as ``plan.planned - plan.recv_lengths``.
+    """
+    p = _axis_size(axis_name)
+    r = lax.axis_index(axis_name)
+    t, k = experts.shape
+    n = t * k
+    d = xt.shape[-1]
+    cap = n if capacity is None else int(capacity)
+
+    flat_e = experts.reshape(-1).astype(jnp.int32)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    if use_merge_sort:
+        from repro.core.mergesort import sort_key_val
+
+        sorted_e, sorted_idx = sort_key_val(flat_e, idx)
+    else:
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e, sorted_idx = flat_e[order], idx[order]
+    xs = xt[sorted_idx // k]  # (n, d) rows in expert order
+
+    # The complete schedule: one collective round of O(p * E) scalars.
+    cuts = distributed_segment_cuts(sorted_e, n_experts, axis_name)
+    e_per, owner_bounds = _expert_ownership(n_experts, p)
+    my_cuts = cuts[r]
+    send_lo = my_cuts[owner_bounds[:-1]]  # (p,)
+    send_hi = my_cuts[owner_bounds[1:]]
+    send_lengths = jnp.minimum(send_hi - send_lo, cap)
+
+    send_x = jax.vmap(lambda a, b: window_rows(xs, a, b, cap))(
+        send_lo, send_hi
+    )  # (p, cap, d)
+    send_e = jax.vmap(lambda a, b: window(sorted_e, a, b, cap))(
+        send_lo, send_hi
+    )  # (p, cap), sentinel tails keep rows sorted
+    recv_x, recv_lengths = balanced_exchange(
+        send_x, send_lengths, axis_name=axis_name
+    )
+    recv_e, _ = balanced_exchange(send_e, axis_name=axis_name)
+
+    # What each source *planned* to send me (from the replicated cuts) —
+    # the drop accounting, exact by construction.
+    lob, hib = owner_bounds[r], owner_bounds[r + 1]
+    planned = cuts[:, hib] - cuts[:, lob]  # (p,)
+
+    # Merge the p received sorted runs; device order = stable tie-break,
+    # so the merged order is the globally stable (expert, dev, pos) order.
+    row_ids = jnp.arange(p * cap, dtype=jnp.int32).reshape(p, cap)
+    _, perm = merge_kway_ranked(
+        recv_e, vals=row_ids, lengths=recv_lengths, out_len=p * cap
+    )
+    total = recv_lengths.sum()
+    valid = jnp.arange(p * cap, dtype=jnp.int32) < total
+    xg = jnp.where(
+        valid[:, None],
+        recv_x.reshape(p * cap, d)[perm],
+        jnp.zeros((), xt.dtype),
+    )
+
+    # Per-owned-expert group sizes from the RECEIVED rows (clipped by the
+    # sideband so sentinel padding never counts) — exact even when a
+    # small capacity truncated some segment.
+    seg_vals = lob + jnp.arange(e_per + 1, dtype=jnp.int32)
+    rl = jax.vmap(
+        lambda row, ln: jnp.minimum(
+            jnp.searchsorted(row, seg_vals, side="left").astype(jnp.int32), ln
+        )
+    )(recv_e, recv_lengths)  # (p, e_per + 1)
+    group_sizes = (rl[:, 1:] - rl[:, :-1]).sum(axis=0)  # (e_per,)
+
+    return DroplessPlan(
+        xg=xg,
+        group_sizes=group_sizes,
+        perm=perm,
+        valid=valid,
+        recv_lengths=recv_lengths,
+        planned=planned,
+        send_lo=send_lo,
+        send_lengths=send_lengths,
+        sorted_e=sorted_e,
+        sorted_idx=sorted_idx,
+    )
+
+
+def dropless_combine(
+    ys: jax.Array,
+    w: jax.Array,
+    plan: DroplessPlan,
+    axis_name: str,
+    top_k: int,
+) -> jax.Array:
+    """Return expert outputs to their source tokens and combine.
+
+    ``ys`` is ``(p * cap, d)`` aligned with ``plan.xg`` rows; ``w`` is
+    this device's ``(t_loc, top_k)`` combine weights.  The reverse
+    exchange is the same slot ``all_to_all`` applied again (an
+    involution), so each assignment's result lands back at its
+    ``(owner, position)`` slot; dropped assignments (position beyond the
+    sent length) contribute zero.  The final scatter uses the *unique*
+    sorted-assignment indices followed by a sum over the choice axis —
+    the same reduction order as a dense reference, hence bit-exact.
+    """
+    p = plan.recv_lengths.shape[0]
+    n = plan.sorted_e.shape[0]
+    cap = plan.perm.shape[0] // p
+    d = ys.shape[-1]
+
+    # Un-merge to received-slot layout, then reverse the exchange.
+    back = jnp.zeros((p * cap, d), ys.dtype)
+    back = back.at[jnp.where(plan.valid, plan.perm, p * cap)].set(
+        ys, mode="drop"
+    )
+    ret, _ = balanced_exchange(back.reshape(p, cap, d), axis_name=axis_name)
+    # ret[q] = results for the segment I originally sent to peer q.
+
+    # owner of each sorted assignment, from its expert id (the static
+    # contiguous ownership map: e_per experts per device)
+    e_per = plan.group_sizes.shape[0]
+    owner = jnp.clip(plan.sorted_e // e_per, 0, p - 1)
+    pos = jnp.arange(n, dtype=jnp.int32) - plan.send_lo[owner]
+    kept = pos < plan.send_lengths[owner]
+    res = jnp.where(
+        kept[:, None],
+        ret.reshape(p * cap, d)[
+            owner * cap + jnp.clip(pos, 0, cap - 1)
+        ],
+        jnp.zeros((), ys.dtype),
+    )  # (n, d) per sorted assignment
+
+    token_w = w.reshape(-1)[plan.sorted_idx].astype(ys.dtype)
+    contrib = res * token_w[:, None]
+    out = jnp.zeros((n, d), ys.dtype).at[plan.sorted_idx].set(contrib)
+    return out.reshape(n // top_k, top_k, d).sum(axis=1)  # (t_loc, d)
+
+
+def dropless_moe_ffn(
+    xt: jax.Array,
+    experts: jax.Array,
+    w: jax.Array,
+    w_gate: jax.Array,
+    w_up: jax.Array,
+    w_down: jax.Array,
+    n_experts: int,
+    axis_name: str,
+    capacity: int | None = None,
+    *,
+    use_merge_sort: bool = True,
+):
+    """Full dropless expert-parallel FFN for one device's tokens.
+
+    Call inside ``shard_map``; the weight arguments are this device's
+    *owned* shards ``(e_per, d, ff)`` / ``(e_per, ff, d)``.  Returns
+    ``(out, plan)`` — ``out`` is ``(t_loc, d)``; ``plan`` carries the
+    exact drop accounting (all zeros for ``capacity=None``).
+    """
+    from repro.models.moe import grouped_gemm
+
+    plan = dropless_dispatch(
+        xt,
+        experts,
+        n_experts,
+        axis_name,
+        capacity,
+        use_merge_sort=use_merge_sort,
+    )
+    gate = grouped_gemm(plan.xg, w_gate, plan.group_sizes)
+    up = grouped_gemm(plan.xg, w_up, plan.group_sizes)
+    h = jax.nn.silu(gate) * up
+    ys = grouped_gemm(h, w_down, plan.group_sizes)
+    out = dropless_combine(ys, w, plan, axis_name, experts.shape[-1])
+    return out, plan

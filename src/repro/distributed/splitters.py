@@ -25,6 +25,17 @@ Two searches live here:
   counts for every candidate value (one more ``psum``) — ``O(p^2 B)``
   scalars per round, never a single element of run data gathered.
 
+* ``distributed_segment_cuts`` — the *value-keyed* degenerate case that
+  MoE expert dispatch needs: when the boundary **values** are known a
+  priori (segment ids ``0..E-1``), Lemma 1's binary search collapses to
+  one local ``searchsorted`` per boundary, so all ``E + 1`` global
+  segment boundaries resolve in a **single** collective round of
+  ``O(p * E)`` int32 scalars.  The result agrees column-for-column with
+  ``distributed_co_rank_kway`` evaluated at the boundary *ranks*
+  (verified in ``tests/_moe_dropless_check.py``): every element with key
+  ``< e`` precedes every element with key ``>= e`` in the stable merge,
+  so the rank-``b_e`` cut vector is exactly the per-run ``< e`` counts.
+
 Both return the same cuts as their single-device counterparts
 (``repro.core.corank.co_rank`` / ``repro.core.kway.co_rank_kway``),
 verified element-for-element in ``tests/_exchange_check.py``.
@@ -41,6 +52,7 @@ from repro.core.compat import axis_size as _axis_size
 __all__ = [
     "distributed_co_rank",
     "distributed_co_rank_kway",
+    "distributed_segment_cuts",
 ]
 
 
@@ -206,3 +218,43 @@ def distributed_co_rank_kway(
     hi = jnp.broadcast_to(lengths[None, :], (b, p)) + i[:, None] * 0
     lo, _ = lax.fori_loop(0, rounds, body, (lo, hi))
     return lo
+
+
+# ---------------------------------------------------------------------------
+# value-keyed segment cuts (one round: boundary values known a priori)
+# ---------------------------------------------------------------------------
+
+
+def distributed_segment_cuts(
+    run_shard: jax.Array,
+    n_segments: int,
+    axis_name: str,
+    length: jax.Array | None = None,
+) -> jax.Array:
+    """All ``n_segments + 1`` global segment boundaries over ``p`` runs.
+
+    Call inside ``shard_map``.  Device ``r`` holds ``run_shard`` — its
+    locally sorted run of integer segment keys in ``[0, n_segments)``
+    (MoE: the stable-sorted expert ids of its local assignments; ragged
+    runs pad with any value ``>= n_segments``, e.g. int32 max, and
+    declare ``length``).
+
+    Returns int32 ``(p, n_segments + 1)``, **replicated** on every
+    device: entry ``[d, s]`` is the number of device ``d``'s elements
+    with key ``< s``.  Consequences, all exact:
+
+    * ``cuts[:, s].sum()`` is segment ``s``'s global start rank, and
+      ``cuts[:, s + 1] - cuts[:, s]`` the per-(device, segment) counts —
+      the complete send/receive schedule of a dropless exchange;
+    * column ``s`` equals the ``distributed_co_rank_kway`` cut vector of
+      the boundary *rank* ``cuts[:, s].sum()`` (all equal keys sort
+      after the boundary, so value cuts and rank cuts coincide);
+    * the cut matrix is the whole metadata: ``O(p * E)`` int32 scalars
+      in one ``all_gather`` round — the known boundary values collapse
+      the co-rank search's ``O(log w)`` rounds to one.
+    """
+    bounds = jnp.arange(n_segments + 1, dtype=run_shard.dtype)
+    local = jnp.searchsorted(run_shard, bounds, side="left").astype(jnp.int32)
+    if length is not None:
+        local = jnp.minimum(local, jnp.asarray(length, jnp.int32))
+    return lax.all_gather(local, axis_name)  # (p, n_segments + 1)

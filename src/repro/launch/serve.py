@@ -29,11 +29,18 @@ def main(argv=None):
     ap.add_argument("--sampler", choices=["greedy", "topk", "topp"],
                     default="topk")
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--moe-dispatch", choices=("capacity", "dropless"),
+                    default=None,
+                    help="override ModelConfig.moe_dispatch (MoE archs)")
     args = ap.parse_args(argv)
 
     cfg = ARCHS[args.arch]
     if args.smoke:
         cfg = smoke_config(cfg)
+    if args.moe_dispatch is not None:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, moe_dispatch=args.moe_dispatch)
 
     params, _ = init_params(cfg, jax.random.key(0))
     max_len = args.prompt_len + args.tokens

@@ -43,12 +43,17 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-runnable)")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--moe-dispatch", choices=("capacity", "dropless"),
+                    default=None,
+                    help="override ModelConfig.moe_dispatch (MoE archs)")
     args = ap.parse_args(argv)
 
     cfg = ARCHS[args.arch]
     if args.smoke:
         cfg = smoke_config(cfg)
     cfg = dataclasses.replace(cfg, learning_rate=args.lr)
+    if args.moe_dispatch is not None:
+        cfg = dataclasses.replace(cfg, moe_dispatch=args.moe_dispatch)
 
     params, _specs = init_params(cfg, jax.random.key(0))
     opt = adamw_init(params, dtype=jnp.dtype(cfg.adam_dtype))

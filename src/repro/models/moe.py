@@ -18,6 +18,22 @@ id with the co-rank merge sort.  Stability is load-bearing three ways:
 
 The router supports softmax (DBRX) and sigmoid+bias aux-free scoring
 (DeepSeek-V3), plus optional shared experts (V3's 1 shared expert).
+
+Two dispatch semantics, selected by ``moe_apply(dispatch=...)``:
+
+* ``"capacity"`` — the classic fixed-slot scatter above: every expert
+  gets ``ceil(T k / E * capacity_factor)`` slots, overflow tokens are
+  dropped (earliest-kept), underflow slots burn FLOPs on zeros.
+* ``"dropless"`` — the paper's answer: the stable sort already makes
+  per-expert segments contiguous, so instead of scattering into slots
+  the segments feed *grouped GEMMs* (``lax.ragged_dot``) directly, with
+  ``group_sizes`` read off the sorted run.  Zero drops, zero wasted
+  slots, at any routing skew — and bit-exact against the dense
+  all-experts reference (``moe_dense_reference``) because every
+  per-assignment contribution is scattered through *unique* indices and
+  reduced over the choice axis in the same order.  The expert-parallel
+  (shard_map) form with the same semantics is
+  ``repro.distributed.moe.dropless_moe_ffn``.
 """
 
 from __future__ import annotations
@@ -121,6 +137,111 @@ def moe_dispatch(experts, n_experts: int, capacity: int,
     return sorted_e, slot_token, slot_choice, slot_pos, keep
 
 
+def grouped_gemm(x: jax.Array, w: jax.Array, group_sizes: jax.Array):
+    """``(m, d)`` rows grouped by expert x ``(g, d, f)`` stacked weights
+    -> ``(m, f)``: row ``i`` in group ``e`` gets ``x[i] @ w[e]``.
+
+    ``group_sizes`` is ``(g,)`` int32, rows ``[sum(gs[:e]), sum(gs[:e+1]))``
+    belong to group ``e``; rows beyond ``sum(gs)`` produce zeros (so
+    exchange-slot padding is inert).  Uses ``lax.ragged_dot`` — one GEMM,
+    no per-expert slot padding — with a dense all-groups einsum fallback
+    for backends without the primitive.
+    """
+    group_sizes = jnp.asarray(group_sizes, jnp.int32)
+    if hasattr(jax.lax, "ragged_dot"):
+        return jax.lax.ragged_dot(x, w, group_sizes)
+    m = x.shape[0]
+    ends = jnp.cumsum(group_sizes)
+    gid = jnp.searchsorted(ends, jnp.arange(m, dtype=jnp.int32), side="right")
+    dense = jnp.einsum("md,gdf->mgf", x, w)
+    out = jnp.take_along_axis(
+        dense, jnp.clip(gid, 0, w.shape[0] - 1)[:, None, None], axis=1
+    )[:, 0]
+    return jnp.where((jnp.arange(m) < ends[-1])[:, None], out, 0)
+
+
+def moe_dispatch_dropless(experts, n_experts: int,
+                          *, use_merge_sort: bool = True):
+    """Exact-cut dispatch plan: no capacity, no ``keep`` mask.
+
+    Returns ``(sorted_e, sorted_idx, group_sizes)``: the stable-sorted
+    expert ids, each sorted slot's flat assignment index
+    (``token * k + choice``), and the per-expert segment sizes
+    (``group_sizes.sum() == T * k`` — every assignment is dispatched,
+    which *is* the dropless property).
+    """
+    t, k = experts.shape
+    flat_e = experts.reshape(-1).astype(jnp.int32)
+    idx = jnp.arange(t * k, dtype=jnp.int32)
+    sorted_e, sorted_idx = _stable_sort_key_val(
+        flat_e, idx, use_merge_sort=use_merge_sort
+    )
+    bounds = jnp.searchsorted(
+        sorted_e, jnp.arange(n_experts + 1, dtype=jnp.int32), side="left"
+    ).astype(jnp.int32)
+    return sorted_e, sorted_idx, bounds[1:] - bounds[:-1]
+
+
+def _dropless_moe(params, xt, w, experts, n_experts, top_k, use_merge_sort):
+    """Grouped-GEMM expert FFN over the exact sorted segments.
+
+    The combine scatters each assignment's weighted output through the
+    *unique* indices ``sorted_idx`` (a permutation of ``arange(T k)``)
+    and reduces over the choice axis — the identical reduction order as
+    ``moe_dense_reference``, so the two are bit-exact, not just close.
+    """
+    t, d = xt.shape
+    _, sorted_idx, group_sizes = moe_dispatch_dropless(
+        experts, n_experts, use_merge_sort=use_merge_sort
+    )
+    xs = xt[sorted_idx // top_k]  # (T*k, d) rows in expert order
+    gate = grouped_gemm(xs, params["w_gate"].astype(xt.dtype), group_sizes)
+    up = grouped_gemm(xs, params["w_up"].astype(xt.dtype), group_sizes)
+    h = jax.nn.silu(gate) * up
+    ys = grouped_gemm(h, params["w_down"].astype(xt.dtype), group_sizes)
+    token_w = w.reshape(-1)[sorted_idx].astype(xt.dtype)
+    out = jnp.zeros((t * top_k, d), xt.dtype)
+    out = out.at[sorted_idx].set(ys * token_w[:, None])
+    return out.reshape(t, top_k, d).sum(axis=1)
+
+
+def moe_dense_reference(params, x, *, n_experts: int, top_k: int,
+                        scoring: str = "softmax"):
+    """All-experts dense reference: every expert runs every token.
+
+    The ground truth the dropless path is asserted bit-exact against —
+    written for obviousness (a Python loop of plain matmuls), not speed.
+    Per-(token, choice) contributions are stacked ``(T, k, d)`` and
+    summed over the choice axis, the same reduction order as both
+    dispatch paths.
+    """
+    b, s, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = jnp.einsum("td,de->te", xt, params["router"].astype(x.dtype))
+    w, experts = route_topk(logits, top_k, scoring=scoring)
+    ys = []
+    for e in range(n_experts):
+        g = xt @ params["w_gate"][e].astype(x.dtype)
+        u = xt @ params["w_up"][e].astype(x.dtype)
+        ys.append((jax.nn.silu(g) * u) @ params["w_down"][e].astype(x.dtype))
+    ys = jnp.stack(ys)  # (E, T, d)
+    t = xt.shape[0]
+    contrib = jnp.stack(
+        [
+            ys[experts[:, c], jnp.arange(t)]
+            * w[:, c, None].astype(x.dtype)
+            for c in range(top_k)
+        ],
+        axis=1,
+    )  # (T, k, d)
+    out = contrib.sum(axis=1)
+    if "shared" in params:
+        from repro.models.layers import mlp
+
+        out = out + mlp(params["shared"], x, kind="swiglu").reshape(t, d)
+    return out.reshape(b, s, d)
+
+
 def _dispatch_combine_one_group(xt, w, experts, n_experts, top_k, capacity,
                                 use_merge_sort):
     """Dispatch tokens of one group into (E, C, d) slots and return
@@ -152,8 +273,15 @@ def _dispatch_combine_one_group(xt, w, experts, n_experts, top_k, capacity,
 
 def moe_apply(params, x, *, n_experts: int, top_k: int, capacity_factor: float,
               scoring: str = "softmax", use_merge_sort: bool = True,
-              dispatch_groups: int = 1, dtype=jnp.bfloat16):
+              dispatch_groups: int = 1, dispatch: str = "capacity",
+              dtype=jnp.bfloat16):
     """Full MoE layer on (b, s, d) activations.
+
+    ``dispatch`` selects the token-dispatch semantics:
+    ``"capacity"`` — fixed ``capacity_factor`` slots, overflow dropped;
+    ``"dropless"`` — exact-cut grouped GEMMs, zero drops and zero wasted
+    slots (``capacity_factor`` and ``dispatch_groups`` are capacity-path
+    knobs and are ignored — there are no slots to size or localise).
 
     ``dispatch_groups > 1`` is GShard-style local dispatch: tokens are
     split into G groups (sized to the data-parallel shards), each group
@@ -163,6 +291,11 @@ def moe_apply(params, x, *, n_experts: int, top_k: int, capacity_factor: float,
     """
     from repro.models import layers as L
 
+    if dispatch not in ("capacity", "dropless"):
+        raise ValueError(
+            f"moe_apply: unknown dispatch {dispatch!r} "
+            "(expected 'capacity' or 'dropless')"
+        )
     b, s, d = x.shape
     t = b * s
     g = max(1, min(dispatch_groups, t))
@@ -171,6 +304,16 @@ def moe_apply(params, x, *, n_experts: int, top_k: int, capacity_factor: float,
     xt = x.reshape(t, d)
     logits = jnp.einsum("td,de->te", xt, params["router"].astype(x.dtype))
     w, experts = route_topk(logits, top_k, scoring=scoring)
+
+    if dispatch == "dropless":
+        out = _dropless_moe(
+            params, xt, w, experts, n_experts, top_k, use_merge_sort
+        )
+        if "shared" in params:
+            from repro.models.layers import mlp
+
+            out = out + mlp(params["shared"], x, kind="swiglu").reshape(t, d)
+        return out.reshape(b, s, d)
 
     tg = t // g
     capacity = int(math.ceil(tg * top_k / n_experts * capacity_factor))

@@ -238,6 +238,7 @@ def _ffn_block(cfg, lp, x, *, moe_layer):
             capacity_factor=cfg.capacity_factor, scoring=cfg.router_scoring,
             use_merge_sort=cfg.use_merge_sort_dispatch,
             dispatch_groups=cfg.moe_dispatch_groups,
+            dispatch=cfg.moe_dispatch,
         )
     else:
         ff = L.mlp(lp["mlp"], h, kind=cfg.mlp_kind)

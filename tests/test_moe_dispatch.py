@@ -1,0 +1,146 @@
+"""Single-device semantic tests for the dropless MoE dispatch path:
+bit-exactness against the dense reference, zero drops, grouped-GEMM
+correctness, determinism, and the config/CLI plumbing."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import ARCHS
+from repro.models.moe import (
+    grouped_gemm,
+    init_moe,
+    moe_apply,
+    moe_dense_reference,
+    moe_dispatch_dropless,
+)
+
+D, FF, E, K = 16, 32, 8, 2
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = np.random.default_rng(0)
+    params, _ = init_moe(jax.random.key(0), D, FF, E)
+    params = jax.tree.map(lambda a: a.astype(jnp.float32), params)
+    x = jnp.asarray(rng.standard_normal((2, 16, D)), jnp.float32)
+    return params, x
+
+
+def test_dropless_bitexact_vs_dense_reference(setup):
+    params, x = setup
+    ref = moe_dense_reference(params, x, n_experts=E, top_k=K)
+    got = moe_apply(params, x, n_experts=E, top_k=K, capacity_factor=1.25,
+                    dispatch="dropless")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_dropless_bitexact_one_hot_routing(setup):
+    """Adversarial router: every token picks the same expert."""
+    params, x = setup
+    p2 = dict(params)
+    p2["router"] = jnp.zeros((D, E)).at[:, 3].set(10.0)
+    ref = moe_dense_reference(p2, x, n_experts=E, top_k=K)
+    got = moe_apply(p2, x, n_experts=E, top_k=K, capacity_factor=1.25,
+                    dispatch="dropless")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_dropless_zero_drops(setup):
+    """Every assignment is dispatched: group sizes sum to T*k always."""
+    _, x = setup
+    rng = np.random.default_rng(1)
+    for experts_np in (
+        rng.integers(0, E, (64, K)),
+        np.full((64, K), 0),  # one-hot skew
+    ):
+        _, sorted_idx, gs = moe_dispatch_dropless(
+            jnp.asarray(experts_np, jnp.int32), E
+        )
+        assert int(gs.sum()) == 64 * K
+        # sorted_idx is a permutation — unique scatter targets
+        assert len(np.unique(np.asarray(sorted_idx))) == 64 * K
+
+
+def test_capacity_with_headroom_matches_dropless(setup):
+    """A capacity factor too large to drop anything must agree with the
+    dropless path numerically (different slot layout, same math)."""
+    params, x = setup
+    drop = moe_apply(params, x, n_experts=E, top_k=K, capacity_factor=1.0,
+                     dispatch="dropless")
+    cap = moe_apply(params, x, n_experts=E, top_k=K, capacity_factor=100.0,
+                    dispatch="capacity")
+    np.testing.assert_allclose(
+        np.asarray(cap), np.asarray(drop), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_dispatch_validation_error(setup):
+    params, x = setup
+    with pytest.raises(ValueError, match="dispatch"):
+        moe_apply(params, x, n_experts=E, top_k=K, capacity_factor=1.0,
+                  dispatch="bogus")
+
+
+def test_grouped_gemm_matches_per_group_loop():
+    rng = np.random.default_rng(2)
+    gs = jnp.asarray([3, 0, 5, 4, 0, 2, 1, 1], jnp.int32)
+    m = int(gs.sum())
+    x = jnp.asarray(rng.standard_normal((m + 4, D)), jnp.float32)  # +padding
+    w = jnp.asarray(rng.standard_normal((E, D, FF)), jnp.float32)
+    got = np.asarray(grouped_gemm(x, w, gs))
+    off = 0
+    for e in range(E):
+        n_e = int(gs[e])
+        want = np.asarray(x[off : off + n_e] @ w[e])
+        np.testing.assert_array_equal(got[off : off + n_e], want)
+        off += n_e
+    # rows beyond sum(group_sizes) are inert zeros
+    np.testing.assert_array_equal(got[m:], 0.0)
+
+
+def test_dropless_determinism_two_compilations(setup):
+    params, x = setup
+    f1 = jax.jit(lambda p, xx: moe_apply(
+        p, xx, n_experts=E, top_k=K, capacity_factor=1.0,
+        dispatch="dropless"))
+    f2 = jax.jit(lambda p, xx: moe_apply(
+        p, xx, n_experts=E, top_k=K, capacity_factor=1.0,
+        dispatch="dropless") * 1.0)
+    np.testing.assert_array_equal(
+        np.asarray(f1(params, x)), np.asarray(f2(params, x))
+    )
+
+
+def test_config_field_defaults_and_threading():
+    cfg = ModelConfig(
+        name="t", family="dense", n_layers=1, d_model=8, n_heads=2,
+        n_kv_heads=2, d_ff=16, vocab=32,
+    )
+    assert cfg.moe_dispatch == "capacity"
+    assert ARCHS["dbrx-132b"].moe_dispatch == "dropless"
+    assert ARCHS["deepseek-v3-671b"].moe_dispatch == "dropless"
+    assert dataclasses.replace(cfg, moe_dispatch="dropless").moe_dispatch \
+        == "dropless"
+
+
+def test_moe_layer_forward_with_dropless_config():
+    """A reduced MoE transformer runs end-to-end with dropless dispatch
+    and produces finite outputs identical across dispatch only in shape
+    (capacity drops tokens, dropless does not)."""
+    from repro.configs.registry import smoke_config
+    from repro.models.transformer import hidden_states, init_params
+
+    cfg = smoke_config(ARCHS["dbrx-132b"])
+    assert cfg.moe_dispatch == "dropless"  # threaded through smoke_config
+    params, _ = init_params(cfg, jax.random.key(0))
+    toks = jnp.asarray(
+        np.random.default_rng(3).integers(0, cfg.vocab, (2, 8)), jnp.int32
+    )
+    h = hidden_states(cfg, params, toks)
+    assert h.shape == (2, 8, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(h.astype(jnp.float32))))

@@ -1,0 +1,39 @@
+"""Dropless expert-parallel MoE tests (subprocess: 8 fake host devices).
+
+The main pytest process must keep a single device (smoke tests and
+benchmarks expect it), so the 8-device runs happen in child processes —
+mirroring tests/test_exchange.py.  ``scripts/verify.sh --moe`` runs this
+file (and the fast semantic checks) explicitly.
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _run(script: str, *args: str):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tests" / script), *args],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=1800,
+    )
+    assert proc.returncode == 0, (
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    )
+    return proc.stdout
+
+
+@pytest.mark.slow  # subprocess run on 8 fake devices
+def test_dropless_eight_devices():
+    out = _run("_moe_dropless_check.py")
+    assert "ALL OK" in out
+    assert "HLO: dropless all-gathers" in out
