@@ -8,8 +8,35 @@ import time
 import jax
 
 
-def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
-    """Median microseconds per call (after jit warmup)."""
+class TimingStats(float):
+    """Float (median µs/call) carrying the min/median/p90 spread.
+
+    Arithmetic on the result keeps working for existing callers (ratios,
+    speedups); ``row()`` picks the extra percentiles up automatically.
+    """
+
+    min_us: float
+    p50_us: float
+    p90_us: float
+
+    def __new__(cls, samples_us):
+        s = sorted(samples_us)
+        n = len(s)
+        self = super().__new__(cls, s[n // 2])
+        self.min_us = s[0]
+        self.p50_us = s[n // 2]
+        self.p90_us = s[min(n - 1, (9 * n) // 10)]
+        return self
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> TimingStats:
+    """Per-call microseconds (after jit warmup).
+
+    Returns a ``TimingStats``: behaves as the median float (back-compat —
+    callers do arithmetic with it) but also reports ``min_us`` and
+    ``p90_us`` so a noisy-neighbour spike is visible instead of silently
+    folded into a single median number.
+    """
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     times = []
@@ -17,11 +44,13 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2] * 1e6
+    return TimingStats([t * 1e6 for t in times])
 
 
 def row(name: str, us: float, derived: str = "") -> str:
+    if isinstance(us, TimingStats):
+        spread = f"min={us.min_us:.1f};p90={us.p90_us:.1f}"
+        derived = f"{derived};{spread}" if derived else spread
     line = f"{name},{us:.1f},{derived}"
     print(line, flush=True)
     return line

@@ -9,10 +9,15 @@ CSV rows and writes the machine-readable baselines ``BENCH_moe.json``
 
 from __future__ import annotations
 
+import pathlib
 import sys
 
-MOE_JSON = "BENCH_moe.json"
-KWAY_JSON = "BENCH_kway.json"
+# Baselines live at the repo root regardless of the invoking cwd — a run
+# from a scratch directory must not scatter BENCH_*.json copies there.
+_REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+MOE_JSON = str(_REPO_ROOT / "BENCH_moe.json")
+KWAY_JSON = str(_REPO_ROOT / "BENCH_kway.json")
 
 
 def main() -> None:

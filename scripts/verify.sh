@@ -7,6 +7,10 @@
 #                                    # (distributed merge/sort + exchange)
 #   scripts/verify.sh --moe          # dropless dispatch: 8-device subprocess
 #                                    # sweeps + single-device semantic checks
+#   scripts/verify.sh --obs          # observability: HLO-invariance-when-off
+#                                    # (tier-1 fails loudly if record points
+#                                    # leak into disabled HLO) + the 8-device
+#                                    # counter/JSONL acceptance run
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -24,6 +28,11 @@ case "${1:-}" in
     --moe)
         export XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}"
         exec python -m pytest -q tests/test_moe_dropless.py tests/test_moe_dispatch.py
+        ;;
+    --obs)
+        # The 8-device acceptance run is a child process that forces its own
+        # device count; the fast-lane HLO-identity tests run here too.
+        exec python -m pytest -q tests/test_obs.py
         ;;
     *)
         exec python -m pytest -x -q

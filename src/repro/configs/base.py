@@ -70,6 +70,10 @@ class ModelConfig:
     layout: str = "tp"  # 'tp' (model axis = TP/EP) | 'fsdp' (model axis
     #                     joins the batch axes; weights gathered per layer —
     #                     the right mesh use for sub-4B models, see §Perf)
+    # observability (repro.obs): '' = metrics off (record points compile
+    # to nothing); a directory enables the JSONL sink there.  Launchers
+    # override with --metrics-dir.
+    metrics_dir: str = ""
     # training
     learning_rate: float = 3e-4
     weight_decay: float = 0.1

@@ -27,7 +27,21 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-__all__ = ["co_rank", "co_rank_batch", "CoRankResult"]
+from repro import obs
+
+__all__ = ["co_rank", "co_rank_batch", "CoRankResult", "prop1_bound"]
+
+
+def prop1_bound(m: int, n: int) -> int:
+    """Proposition 1's iteration bound ``ceil(log2 min(m, n)) + 1``.
+
+    The runtime invariant counter (``corank.iterations``) and the
+    property tests both check recorded iteration counts against this.
+    """
+    mn = min(m, n)
+    if mn <= 0:
+        return 0
+    return (mn - 1).bit_length() + 1
 
 
 class CoRankResult(NamedTuple):
@@ -103,6 +117,10 @@ def co_rank(i: jax.Array, a: jax.Array, b: jax.Array) -> CoRankResult:
     j, k, _, _, iters = lax.while_loop(
         cond, body, (j, k, j_low, k_low, i * 0)
     )
+    if obs.enabled():
+        obs.histogram(
+            "corank.iterations", iters, bound=prop1_bound(m, n), m=m, n=n
+        )
     return CoRankResult(j, k, iters)
 
 

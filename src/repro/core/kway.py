@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import obs
 from repro.core.merge import partition_bounds
 
 __all__ = [
@@ -120,6 +121,8 @@ def co_rank_kway(
 
     lo = jnp.zeros((k,), jnp.int32)
     lo, _ = lax.fori_loop(0, rounds, body, (lo, lengths))
+    if obs.enabled():
+        obs.gauge("kway.corank_rounds", rounds, bound=rounds, k=k, w=w)
     return lo
 
 
@@ -257,16 +260,28 @@ def merge_kway(runs: jax.Array, p: int = 8) -> jax.Array:
     """
     k, w = runs.shape
     total = k * w
-    bounds = partition_bounds(total, p)  # (p+1,)
-    cuts = co_rank_kway_batch(bounds, runs)  # (p+1, k)
-    seg_len = -(-total // p)
+    with obs.span("repro.merge_kway"):
+        bounds = partition_bounds(total, p)  # (p+1,)
+        cuts = co_rank_kway_batch(bounds, runs)  # (p+1, k)
+        seg_len = -(-total // p)
 
-    segs = jax.vmap(
-        lambda lo, hi: _kfinger_segment(runs, lo, hi, seg_len)
-    )(cuts[:-1], cuts[1:])  # (p, seg_len)
+        if obs.enabled():
+            # Proposition 2 at runtime: per-PE output block sizes differ
+            # by at most one (and the cut rows sum to the block bounds).
+            sizes = bounds[1:] - bounds[:-1]
+            obs.gauge("kway.partition_sizes", sizes, k=k, w=w, p=p)
+            obs.gauge(
+                "kway.partition_imbalance", sizes.max() - sizes.min(), p=p
+            )
 
-    idx = bounds[:-1, None] + jnp.arange(seg_len, dtype=jnp.int32)[None, :]
-    valid = idx < bounds[1:, None]
-    out = jnp.zeros((total,), runs.dtype)
-    out = out.at[jnp.where(valid, idx, total)].set(segs, mode="drop")
-    return out
+        segs = jax.vmap(
+            lambda lo, hi: _kfinger_segment(runs, lo, hi, seg_len)
+        )(cuts[:-1], cuts[1:])  # (p, seg_len)
+
+        idx = (
+            bounds[:-1, None] + jnp.arange(seg_len, dtype=jnp.int32)[None, :]
+        )
+        valid = idx < bounds[1:, None]
+        out = jnp.zeros((total,), runs.dtype)
+        out = out.at[jnp.where(valid, idx, total)].set(segs, mode="drop")
+        return out

@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import obs
 from repro.core.compat import axis_size as _axis_size
 from repro.core.compat import shard_map as _shard_map
 from repro.core.corank import co_rank
@@ -186,17 +187,22 @@ def sharded_merge_kway(
     s = w  # every output block is exactly N/p elements (Proposition 2)
     bounds = jnp.stack([r * s, (r + 1) * s]).astype(jnp.int32)
 
-    if strategy == "exchange":
-        cuts = distributed_co_rank_kway(bounds, run_shard, axis_name)
-        segments, lengths = exchange_block(
-            run_shard, cuts, axis_name, capacity=capacity
+    with obs.span(f"repro.sharded_merge_kway.{strategy}"):
+        if strategy == "exchange":
+            with obs.span("repro.splitters"):
+                cuts = distributed_co_rank_kway(bounds, run_shard, axis_name)
+            segments, lengths = exchange_block(
+                run_shard, cuts, axis_name, capacity=capacity
+            )
+            with obs.span("repro.local_merge"):
+                return merge_kway_ranked(segments, lengths=lengths, out_len=s)
+        runs = lax.all_gather(run_shard, axis_name)  # (p, N/p) replicated
+        cuts = co_rank_kway_batch(bounds, runs)  # (2, p) local cuts
+        lo, hi = cuts[0], cuts[1]
+        windows = jax.vmap(lambda row, a, b: window(row, a, b, s))(
+            runs, lo, hi
         )
-        return merge_kway_ranked(segments, lengths=lengths, out_len=s)
-    runs = lax.all_gather(run_shard, axis_name)  # (p, N/p) replicated
-    cuts = co_rank_kway_batch(bounds, runs)  # (2, p) local cuts
-    lo, hi = cuts[0], cuts[1]
-    windows = jax.vmap(lambda row, a, b: window(row, a, b, s))(runs, lo, hi)
-    return merge_kway_ranked(windows, lengths=hi - lo, out_len=s)
+        return merge_kway_ranked(windows, lengths=hi - lo, out_len=s)
 
 
 def sharded_sort(
@@ -214,10 +220,12 @@ def sharded_sort(
     precede shard ``d+1``'s equal elements), matching a global stable
     sort of the concatenated input.
     """
-    local = merge_sort(x_shard, fanout=fanout)
-    return sharded_merge_kway(
-        local, axis_name, strategy=strategy, capacity=capacity
-    )
+    with obs.span("repro.sharded_sort"):
+        with obs.span("repro.local_sort"):
+            local = merge_sort(x_shard, fanout=fanout)
+        return sharded_merge_kway(
+            local, axis_name, strategy=strategy, capacity=capacity
+        )
 
 
 def distributed_sort(

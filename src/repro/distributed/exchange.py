@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import obs
 from repro.core.mergesort import sentinel_max
 
 __all__ = [
@@ -173,21 +174,50 @@ def exchange_block(
     w = run_shard.shape[0]
     r = lax.axis_index(axis_name)
     cap = w if capacity is None else int(capacity)
-    cuts = jnp.asarray(cuts, jnp.int32)
-    all_cuts = lax.all_gather(cuts, axis_name)  # (p, 2, p)
-    lo_mine = all_cuts[:, 0, r]  # (p,) each peer's segment bounds in MY run
-    hi_mine = all_cuts[:, 1, r]
-    send = jax.vmap(lambda a, b: window(run_shard, a, b, cap))(
-        lo_mine, hi_mine
-    )  # (p, cap): row d = my segment for peer d
-    # Wire sideband: sender r's entry d is cuts_d[1, r] - cuts_d[0, r], so
-    # after the exchange receiver d's entry r equals its own
-    # cuts[1, r] - cuts[0, r] — the sideband and the receiver-local cut
-    # differences provably agree (asserted in tests/_exchange_check.py).
-    send_lengths = jnp.minimum(hi_mine - lo_mine, cap)
-    segments, lengths = balanced_exchange(
-        send, send_lengths, axis_name=axis_name
-    )  # (p, cap): row src = run src's segment for me
+    with obs.span("repro.exchange_block"):
+        cuts = jnp.asarray(cuts, jnp.int32)
+        all_cuts = lax.all_gather(cuts, axis_name)  # (p, 2, p)
+        lo_mine = all_cuts[:, 0, r]  # (p,) peers' segment bounds in MY run
+        hi_mine = all_cuts[:, 1, r]
+        send = jax.vmap(lambda a, b: window(run_shard, a, b, cap))(
+            lo_mine, hi_mine
+        )  # (p, cap): row d = my segment for peer d
+        # Wire sideband: sender r's entry d is cuts_d[1, r] - cuts_d[0, r],
+        # so after the exchange receiver d's entry r equals its own
+        # cuts[1, r] - cuts[0, r] — the sideband and the receiver-local cut
+        # differences provably agree (asserted in tests/_exchange_check.py).
+        send_lengths = jnp.minimum(hi_mine - lo_mine, cap)
+        segments, lengths = balanced_exchange(
+            send, send_lengths, axis_name=axis_name
+        )  # (p, cap): row src = run src's segment for me
+        if obs.enabled():
+            p = segments.shape[0]
+            itemsize = jnp.dtype(run_shard.dtype).itemsize
+            obs.gauge(
+                "exchange.send_lengths", send_lengths, capacity=cap, device=r
+            )
+            obs.gauge(
+                "exchange.peer_bytes",
+                lengths * itemsize,
+                capacity=cap,
+                itemsize=itemsize,
+                device=r,
+            )
+            # Proposition 2 over the wire: real elements received == the
+            # receiver's exact output block (N/p on the sort path).
+            obs.gauge("exchange.block_elements", lengths.sum(), device=r)
+            # Static-shape overhead: sentinel slots shipped vs real rows.
+            obs.gauge(
+                "exchange.padding_slots",
+                p * cap - lengths.sum(),
+                capacity=cap,
+                device=r,
+            )
+            obs.gauge(
+                "exchange.length_skew",
+                lengths.max() - lengths.min(),
+                device=r,
+            )
     return segments, lengths
 
 

@@ -51,6 +51,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import obs
 from repro.core.compat import axis_size as _axis_size
 from repro.core.kway import merge_kway_ranked
 from repro.distributed.exchange import balanced_exchange, window, window_rows
@@ -184,6 +185,31 @@ def dropless_dispatch(
     )(recv_e, recv_lengths)  # (p, e_per + 1)
     group_sizes = (rl[:, 1:] - rl[:, :-1]).sum(axis=0)  # (e_per,)
 
+    if obs.enabled():
+        obs.gauge(
+            "moe.planned_per_source", planned, capacity=cap, device=r
+        )
+        obs.gauge("moe.recv_per_source", recv_lengths, device=r)
+        # Exact overflow accounting: planned minus arrived, summed — zero
+        # at the worst-case-safe default capacity, never silent otherwise.
+        obs.counter(
+            "moe.overflow",
+            (planned - recv_lengths).sum(),
+            capacity=cap,
+            device=r,
+        )
+        obs.gauge(
+            "moe.group_sizes", group_sizes, n_experts=n_experts, device=r
+        )
+        mean = jnp.maximum(
+            group_sizes.sum().astype(jnp.float32) / e_per, 1e-9
+        )
+        obs.gauge(
+            "moe.routing_skew",
+            group_sizes.max().astype(jnp.float32) / mean,
+            device=r,
+        )
+
     return DroplessPlan(
         xg=xg,
         group_sizes=group_sizes,
@@ -271,17 +297,21 @@ def dropless_moe_ffn(
     """
     from repro.models.moe import grouped_gemm
 
-    plan = dropless_dispatch(
-        xt,
-        experts,
-        n_experts,
-        axis_name,
-        capacity,
-        use_merge_sort=use_merge_sort,
-    )
-    gate = grouped_gemm(plan.xg, w_gate, plan.group_sizes)
-    up = grouped_gemm(plan.xg, w_up, plan.group_sizes)
-    h = jax.nn.silu(gate) * up
-    ys = grouped_gemm(h, w_down, plan.group_sizes)
-    out = dropless_combine(ys, w, plan, axis_name, experts.shape[-1])
+    with obs.span("repro.dropless_moe_ffn"):
+        with obs.span("repro.dropless_dispatch"):
+            plan = dropless_dispatch(
+                xt,
+                experts,
+                n_experts,
+                axis_name,
+                capacity,
+                use_merge_sort=use_merge_sort,
+            )
+        with obs.span("repro.moe_grouped_gemm"):
+            gate = grouped_gemm(plan.xg, w_gate, plan.group_sizes)
+            up = grouped_gemm(plan.xg, w_up, plan.group_sizes)
+            h = jax.nn.silu(gate) * up
+            ys = grouped_gemm(h, w_down, plan.group_sizes)
+        with obs.span("repro.dropless_combine"):
+            out = dropless_combine(ys, w, plan, axis_name, experts.shape[-1])
     return out, plan

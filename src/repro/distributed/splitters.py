@@ -47,7 +47,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import obs
 from repro.core.compat import axis_size as _axis_size
+from repro.core.corank import prop1_bound
 
 __all__ = [
     "distributed_co_rank",
@@ -123,6 +125,20 @@ def distributed_co_rank(
         return new_j, new_k, new_j_low, new_k_low
 
     j, k, _, _ = lax.fori_loop(0, rounds, body, (j, k, j_low, k_low))
+    if obs.enabled():
+        # The lock-step distributed search runs a fixed padded schedule of
+        # ``ceil(log2(min(m,n)+1)) + 2`` rounds (one convergence round +
+        # one safety round over the per-device dynamic searches); the
+        # truly dynamic Prop-1 counter is ``corank.iterations``.
+        obs.gauge(
+            "splitters.pairwise_rounds",
+            rounds,
+            bound=rounds,
+            prop1_bound=prop1_bound(m, n),
+            m=m,
+            n=n,
+            device=lax.axis_index(axis_name),
+        )
     return j, k
 
 
@@ -217,6 +233,18 @@ def distributed_co_rank_kway(
     lo = jnp.zeros((b, p), jnp.int32) + i[:, None] * 0
     hi = jnp.broadcast_to(lengths[None, :], (b, p)) + i[:, None] * 0
     lo, _ = lax.fori_loop(0, rounds, body, (lo, hi))
+    if obs.enabled():
+        # ``rounds == ceil(log2(w + 1)) + 1`` — Prop 1's bound over the
+        # ``w + 1`` candidate cuts, plus the one convergence round the
+        # static lock-step schedule pays.
+        obs.gauge(
+            "splitters.kway_rounds",
+            rounds,
+            bound=max(1, w).bit_length() + 1,
+            w=w,
+            batch=b,
+            device=r,
+        )
     return lo
 
 
@@ -257,4 +285,13 @@ def distributed_segment_cuts(
     local = jnp.searchsorted(run_shard, bounds, side="left").astype(jnp.int32)
     if length is not None:
         local = jnp.minimum(local, jnp.asarray(length, jnp.int32))
-    return lax.all_gather(local, axis_name)  # (p, n_segments + 1)
+    cuts = lax.all_gather(local, axis_name)  # (p, n_segments + 1)
+    if obs.enabled():
+        p = cuts.shape[0]
+        obs.counter(
+            "splitters.segment_cut_scalars",
+            p * (n_segments + 1),
+            n_segments=n_segments,
+            device=lax.axis_index(axis_name),
+        )
+    return cuts

@@ -23,6 +23,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels import ref
 from repro.kernels.merge import merge_kway_pallas, merge_pallas
 
@@ -32,9 +33,15 @@ __all__ = [
     "stable_sort",
     "default_backend",
     "BACKEND_ENV_VAR",
+    "VALID_BACKENDS",
 ]
 
 BACKEND_ENV_VAR = "REPRO_MERGE_BACKEND"
+VALID_BACKENDS = ("pallas", "xla", "xla_native")
+
+# (op, backend, source) triples already announced — the dispatch choice is
+# logged once per distinct selection, not once per traced call.
+_LOGGED_CHOICES: set = set()
 
 
 def default_backend() -> str:
@@ -45,7 +52,7 @@ def default_backend() -> str:
     'xla' (they have no native-op equivalent).
     """
     env = os.environ.get(BACKEND_ENV_VAR, "auto").strip().lower()
-    if env in ("pallas", "xla", "xla_native"):
+    if env in VALID_BACKENDS:
         return env
     if env not in ("", "auto"):
         raise ValueError(
@@ -53,6 +60,41 @@ def default_backend() -> str:
             f"'auto', got {env!r}"
         )
     return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _dispatch(op: str, backend: str | None) -> str:
+    """Resolve + validate the backend and announce the choice once.
+
+    An explicit ``backend=`` typo must fail loudly, not fall through to
+    the XLA path; the selected backend is logged once per (op, backend,
+    source) through the obs layer — host-side, so the log itself is
+    trace-time only and never enters the compiled program.
+    """
+    if backend is None:
+        resolved = default_backend()
+        env = os.environ.get(BACKEND_ENV_VAR, "").strip().lower()
+        source = "env" if env in VALID_BACKENDS else "auto"
+    else:
+        if backend not in VALID_BACKENDS:
+            raise ValueError(
+                f"{op}: backend must be one of {VALID_BACKENDS}, "
+                f"got {backend!r}"
+            )
+        resolved = backend
+        source = "arg"
+    key = (op, resolved, source)
+    if key not in _LOGGED_CHOICES:
+        _LOGGED_CHOICES.add(key)
+        obs.log_event(
+            "kernels.backend_selected",
+            op=op,
+            backend=resolved,
+            source=source,
+            jax_backend=jax.default_backend(),
+        )
+    if obs.enabled():
+        obs.counter("kernels.dispatch_calls", 1, op=op, backend=resolved)
+    return resolved
 
 
 def _resolve_interpret(interpret: bool | None) -> bool:
@@ -84,10 +126,13 @@ def stable_merge(
     (rank-merge via searchsorted — the pure-jnp oracle), or None = auto
     (``default_backend()``: TPU -> pallas, env-overridable).
     """
-    backend = backend or default_backend()
-    if backend == "pallas":
-        return merge_pallas(a, b, tile=tile, interpret=_resolve_interpret(interpret))
-    return ref.merge_ref(a, b)
+    backend = _dispatch("stable_merge", backend)
+    with obs.span("repro.stable_merge"):
+        if backend == "pallas":
+            return merge_pallas(
+                a, b, tile=tile, interpret=_resolve_interpret(interpret)
+            )
+        return ref.merge_ref(a, b)
 
 
 @functools.partial(jax.jit, static_argnames=("backend", "tile", "interpret"))
@@ -106,12 +151,13 @@ def stable_merge_kway(
     """
     from repro.core.kway import merge_kway_ranked
 
-    backend = backend or default_backend()
-    if backend == "pallas":
-        return merge_kway_pallas(
-            runs, tile=tile, interpret=_resolve_interpret(interpret)
-        )
-    return merge_kway_ranked(runs)
+    backend = _dispatch("stable_merge_kway", backend)
+    with obs.span("repro.stable_merge_kway"):
+        if backend == "pallas":
+            return merge_kway_pallas(
+                runs, tile=tile, interpret=_resolve_interpret(interpret)
+            )
+        return merge_kway_ranked(runs)
 
 
 @functools.partial(jax.jit, static_argnames=("backend",))
@@ -119,7 +165,8 @@ def stable_sort(x: jax.Array, *, backend: str | None = None) -> jax.Array:
     """Stable 1-D sort; merge-sort on the co-rank primitive."""
     from repro.core.mergesort import merge_sort
 
-    backend = backend or default_backend()
-    if backend == "xla_native":  # escape hatch: XLA's own sort
-        return jnp.sort(x, stable=True)
-    return merge_sort(x)
+    backend = _dispatch("stable_sort", backend)
+    with obs.span("repro.stable_sort"):
+        if backend == "xla_native":  # escape hatch: XLA's own sort
+            return jnp.sort(x, stable=True)
+        return merge_sort(x)

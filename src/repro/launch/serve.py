@@ -9,12 +9,14 @@ autoregressively with top-k/top-p sampling over the merge-sorted logits.
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.registry import ARCHS, smoke_config
 from repro.models.transformer import decode_step, init_cache, init_params
 from repro.serving.sampling import sample_greedy, sample_topk, sample_topp
@@ -32,6 +34,12 @@ def main(argv=None):
     ap.add_argument("--moe-dispatch", choices=("capacity", "dropless"),
                     default=None,
                     help="override ModelConfig.moe_dispatch (MoE archs)")
+    ap.add_argument("--metrics-dir", default="",
+                    help="enable repro.obs metrics; JSONL lands here "
+                         "(overrides ModelConfig.metrics_dir)")
+    ap.add_argument("--profile-steps", type=int, default=0,
+                    help="dump a jax.profiler trace covering the first N "
+                         "decode steps (under <metrics-dir>/profile)")
     args = ap.parse_args(argv)
 
     cfg = ARCHS[args.arch]
@@ -41,6 +49,12 @@ def main(argv=None):
         import dataclasses
 
         cfg = dataclasses.replace(cfg, moe_dispatch=args.moe_dispatch)
+    metrics_dir = args.metrics_dir or cfg.metrics_dir
+    if metrics_dir:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, metrics_dir=metrics_dir)
+        obs.enable(metrics_dir=metrics_dir)
 
     params, _ = init_params(cfg, jax.random.key(0))
     max_len = args.prompt_len + args.tokens
@@ -54,26 +68,58 @@ def main(argv=None):
     step = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
     key = jax.random.key(42)
 
+    if obs.enabled():
+        # Compile-time yardstick for the decode entrypoint's collectives.
+        try:
+            obs.attach_hlo_report(
+                "decode_step",
+                step.lower(params, cache, prompts[:, :1]),
+                arch=cfg.name,
+            )
+        except Exception as e:  # report must never kill serving
+            obs.log_event(
+                "hlo.report_failed", entry="decode_step", error=repr(e)
+            )
+
+    profiling = False
+    if args.profile_steps > 0:
+        obs.start_profile(os.path.join(metrics_dir or ".", "profile"))
+        profiling = True
+
     # teacher-forced prefill through the decode path (batched serving uses
     # prefill_logits + cache population; the smoke driver keeps it simple)
     t0 = time.time()
     logits = None
-    for t in range(args.prompt_len):
-        logits, cache = step(params, cache, prompts[:, t : t + 1])
+    with obs.host_span("serve.prefill"):
+        for t in range(args.prompt_len):
+            logits, cache = step(params, cache, prompts[:, t : t + 1])
 
     out_tokens = []
-    for _ in range(args.tokens):
-        key, sub = jax.random.split(key)
-        if args.sampler == "greedy":
-            nxt = sample_greedy(logits)
-        elif args.sampler == "topk":
-            nxt = sample_topk(sub, logits, k=min(50, cfg.vocab),
-                              fanout=cfg.fanout)
-        else:
-            nxt = sample_topp(sub, logits, p=0.9, k=min(64, cfg.vocab),
-                              fanout=cfg.fanout)
-        out_tokens.append(np.asarray(nxt))
-        logits, cache = step(params, cache, nxt[:, None].astype(jnp.int32))
+    for i in range(args.tokens):
+        obs.set_step(i)
+        with obs.step_span("decode", i):
+            key, sub = jax.random.split(key)
+            if args.sampler == "greedy":
+                nxt = sample_greedy(logits)
+            elif args.sampler == "topk":
+                nxt = sample_topk(sub, logits, k=min(50, cfg.vocab),
+                                  fanout=cfg.fanout)
+            else:
+                nxt = sample_topp(sub, logits, p=0.9, k=min(64, cfg.vocab),
+                                  fanout=cfg.fanout)
+            out_tokens.append(np.asarray(nxt))
+            logits, cache = step(
+                params, cache, nxt[:, None].astype(jnp.int32)
+            )
+        if obs.enabled():
+            obs.flush()
+        if profiling and i + 1 >= args.profile_steps:
+            obs.stop_profile()
+            profiling = False
+    if profiling:
+        obs.stop_profile()
+    if obs.enabled():
+        obs.flush()
 
     dt = time.time() - t0
     gen = np.stack(out_tokens, axis=1)

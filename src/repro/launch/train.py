@@ -13,12 +13,14 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.checkpoint.checkpointer import (
     latest_step,
     restore_checkpoint,
@@ -46,6 +48,12 @@ def main(argv=None):
     ap.add_argument("--moe-dispatch", choices=("capacity", "dropless"),
                     default=None,
                     help="override ModelConfig.moe_dispatch (MoE archs)")
+    ap.add_argument("--metrics-dir", default="",
+                    help="enable repro.obs metrics; JSONL lands here "
+                         "(overrides ModelConfig.metrics_dir)")
+    ap.add_argument("--profile-steps", type=int, default=0,
+                    help="dump a jax.profiler trace covering the first N "
+                         "steps (under <metrics-dir>/profile)")
     args = ap.parse_args(argv)
 
     cfg = ARCHS[args.arch]
@@ -54,6 +62,10 @@ def main(argv=None):
     cfg = dataclasses.replace(cfg, learning_rate=args.lr)
     if args.moe_dispatch is not None:
         cfg = dataclasses.replace(cfg, moe_dispatch=args.moe_dispatch)
+    metrics_dir = args.metrics_dir or cfg.metrics_dir
+    if metrics_dir:
+        cfg = dataclasses.replace(cfg, metrics_dir=metrics_dir)
+        obs.enable(metrics_dir=metrics_dir)
 
     params, _specs = init_params(cfg, jax.random.key(0))
     opt = adamw_init(params, dtype=jnp.dtype(cfg.adam_dtype))
@@ -73,8 +85,14 @@ def main(argv=None):
     dc = DataConfig(vocab=cfg.vocab, seq_len=args.seq, batch=args.batch)
     stream = batches(dc, start_step=start)
 
+    profiling = False
+    if args.profile_steps > 0:
+        obs.start_profile(os.path.join(metrics_dir or ".", "profile"))
+        profiling = True
+
     t0 = time.time()
     losses = []
+    hlo_reported = False
     for step in range(start, args.steps):
         batch = next(stream)
         model_batch = {k: batch[k] for k in ("tokens", "labels", "mask")}
@@ -82,10 +100,34 @@ def main(argv=None):
             model_batch["frontend_embeds"] = jnp.zeros(
                 (args.batch, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16
             )
-        params, opt, metrics = step_fn(
-            params, opt, model_batch, jnp.int32(step)
-        )
-        losses.append(float(metrics["loss"]))
+        if obs.enabled() and not hlo_reported:
+            # Compile-time yardstick: the jitted entrypoint's predicted
+            # collective traffic, reconciled against runtime byte counters.
+            hlo_reported = True
+            try:
+                obs.attach_hlo_report(
+                    "train_step",
+                    step_fn.lower(
+                        params, opt, model_batch, jnp.int32(step)
+                    ),
+                    arch=cfg.name,
+                )
+            except Exception as e:  # report must never kill training
+                obs.log_event(
+                    "hlo.report_failed", entry="train_step", error=repr(e)
+                )
+        obs.set_step(step)
+        with obs.step_span("train", step):
+            params, opt, metrics = step_fn(
+                params, opt, model_batch, jnp.int32(step)
+            )
+            losses.append(float(metrics["loss"]))
+        if obs.enabled():
+            obs.gauge("train.loss", losses[-1])
+            obs.flush()
+        if profiling and step + 1 - start >= args.profile_steps:
+            obs.stop_profile()
+            profiling = False
         if (step + 1) % args.log_every == 0:
             tps = args.batch * args.seq * args.log_every / (time.time() - t0)
             print(
@@ -101,6 +143,10 @@ def main(argv=None):
             )
             print(f"[ckpt] step {step + 1}")
 
+    if profiling:
+        obs.stop_profile()
+    if obs.enabled():
+        obs.flush()
     print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
     return losses
 

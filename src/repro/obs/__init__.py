@@ -1,0 +1,140 @@
+"""Runtime telemetry: jit-safe metrics, invariant counters, trace spans.
+
+Enable with ``obs.enable(metrics_dir=...)`` (JSONL under that directory)
+or ``obs.enable(sink=...)`` / ``obs.capture()`` (in-memory, tests).
+While disabled — the default — every record point is a trace-time no-op:
+instrumented functions compile to identical HLO, modulo debug metadata
+(asserted in ``tests/test_obs.py``), so the hot paths carry their probes
+for free.
+
+JSONL schema (one object per line)::
+
+    {"ts": <unix float>, "metric": "<dotted.name>",
+     "kind": "counter" | "gauge" | "histogram" | "event",
+     "step": <int, when set_step() was called>,
+     "value": <scalar or list>            # counter/gauge
+     "count"/"min"/"p50"/"p90"/"max"/"sum": ...  # histogram summary
+     "labels": {<static + traced labels>}}
+
+Under ``shard_map`` each device emits its own record (instrumented sites
+attach ``device=lax.axis_index(axis)`` as a label); under ``vmap`` each
+lane does.
+
+Metrics catalog — every record point woven through the hot paths:
+
+== Proposition 1 (co-rank search cost) ==
+``corank.iterations``        histogram, per search: actual while-loop
+                             iterations of Algorithm 1; labels
+                             ``bound = ceil(log2 min(m, n)) + 1`` (the
+                             paper's bound; value <= bound always),
+                             ``m``, ``n``.
+``kway.corank_rounds``       gauge: lock-step binary-search rounds of
+                             the k-way cut (static ``ceil(log2 w)+1``);
+                             labels ``bound``, ``k``, ``w``.
+``splitters.kway_rounds``    gauge: collective rounds of the
+                             distributed k-way splitter; labels
+                             ``bound``, ``w``, ``device``.
+``splitters.pairwise_rounds``gauge: rounds of distributed Algorithm 1;
+                             labels ``bound``, ``m``, ``n``.
+``splitters.segment_cut_scalars`` counter: int32 scalars gathered by
+                             the one-round value-keyed segment cuts
+                             (``p * (E+1)``); labels ``n_segments``.
+
+== Proposition 2 (perfect balance) ==
+``kway.partition_sizes``     gauge, ``(p,)``: per-PE output block sizes
+                             of ``merge_kway`` (differ by <= 1).
+``kway.partition_imbalance`` gauge: max - min of the above (0 or 1).
+``exchange.block_elements``  gauge: this device's received real
+                             elements, ``== N/p`` on the sort path;
+                             labels ``device``.
+
+== Exchange traffic ==
+``exchange.peer_bytes``      gauge, ``(p,)``: real payload bytes
+                             received per source peer (lengths sideband
+                             x itemsize); labels ``device``,
+                             ``capacity``, ``itemsize``.
+``exchange.send_lengths``    gauge, ``(p,)``: elements sent per peer
+                             (pre-truncation clip); labels ``device``.
+``exchange.padding_slots``   gauge: sentinel-padded slots shipped
+                             (``p*capacity - sum(lengths)``) — the
+                             static-shape overhead; labels ``device``.
+``exchange.length_skew``     gauge: max - min of per-peer segment
+                             lengths (raggedness); labels ``device``.
+
+== MoE routing ==
+``moe.planned_per_source``   gauge, ``(p,)``: assignments each source
+                             planned to send me (from the cut matrix).
+``moe.recv_per_source``      gauge, ``(p,)``: assignments that arrived
+                             (sideband).
+``moe.overflow``             counter: planned - received, summed — the
+                             exact per-step drop count (0 at default
+                             capacity); labels ``device``.
+``moe.group_sizes``          gauge, ``(e_per,)``: rows per owned expert
+                             feeding the grouped GEMMs.
+``moe.routing_skew``         gauge: max(group_sizes) / mean — 1.0 is
+                             perfectly uniform routing.
+
+== Dispatch / compile ==
+``kernels.backend_selected`` event, once per (op, backend): which
+                             backend ``repro.kernels.ops`` dispatch
+                             chose and why (env override vs auto).
+``kernels.dispatch_calls``   counter per traced call; labels ``op``,
+                             ``backend``.
+``hlo.collectives``          event: HLO-predicted collective bytes of a
+                             jitted entrypoint (``attach_hlo_report``).
+``obs.profile_started`` / ``obs.profile_stopped`` events: profiler
+                             trace-dump window (``--profile-steps``).
+
+Spans: subsystem boundaries (``sharded_sort``, ``exchange_block``,
+``dropless_moe_ffn``, ``merge_kway``, kernel dispatch) sit inside
+``obs.span("repro.<name>")`` — ``jax.named_scope`` groups their ops in
+profiler views; launcher loops use ``step_span`` / ``host_span``.
+"""
+
+from repro.obs.registry import (
+    capture,
+    counter,
+    disable,
+    enable,
+    enabled,
+    flush,
+    gauge,
+    histogram,
+    log_event,
+    record,
+    set_step,
+    totals,
+)
+from repro.obs.sink import JsonlSink, ListSink, Sink
+from repro.obs.trace import (
+    attach_hlo_report,
+    host_span,
+    span,
+    start_profile,
+    step_span,
+    stop_profile,
+)
+
+__all__ = [
+    "enable",
+    "disable",
+    "enabled",
+    "capture",
+    "record",
+    "counter",
+    "gauge",
+    "histogram",
+    "log_event",
+    "set_step",
+    "flush",
+    "totals",
+    "Sink",
+    "ListSink",
+    "JsonlSink",
+    "span",
+    "host_span",
+    "step_span",
+    "start_profile",
+    "stop_profile",
+    "attach_hlo_report",
+]

@@ -1,0 +1,131 @@
+"""Profiler spans and compile-time reports.
+
+Three span flavours, all no-ops while obs is disabled (so the compiled
+program — including its op metadata — is untouched on the off path):
+
+* :func:`span` — for *traced* code: ``jax.named_scope`` so the
+  subsystem boundary shows up as a scope prefix on every op it emits,
+  which the profiler's HLO-op view groups by.
+* :func:`host_span` — for host code: ``jax.profiler.TraceAnnotation``,
+  a named region on the host timeline.
+* :func:`step_span` — the launcher loop marker:
+  ``jax.profiler.StepTraceAnnotation`` so traces viewed in TensorBoard /
+  Perfetto get per-step boundaries.
+
+Plus the opt-in trace dump (:func:`start_profile` / :func:`stop_profile`
+— ``--profile-steps`` on the launchers) and :func:`attach_hlo_report`,
+which parses a jitted entrypoint's compiled HLO with
+``repro.launch.hlo_stats`` and logs the predicted collective traffic so
+runtime byte counters have a static yardstick to reconcile against.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+from repro.obs.registry import enabled, log_event
+
+__all__ = [
+    "span",
+    "host_span",
+    "step_span",
+    "start_profile",
+    "stop_profile",
+    "attach_hlo_report",
+]
+
+
+@contextlib.contextmanager
+def span(name: str):
+    """Scope traced ops under ``name`` (``jax.named_scope``) when enabled."""
+    if not enabled():
+        yield
+        return
+    import jax
+
+    with jax.named_scope(name):
+        yield
+
+
+@contextlib.contextmanager
+def host_span(name: str):
+    """Host-timeline annotation (``jax.profiler.TraceAnnotation``)."""
+    if not enabled():
+        yield
+        return
+    import jax
+
+    with jax.profiler.TraceAnnotation(name):
+        yield
+
+
+@contextlib.contextmanager
+def step_span(name: str, step: int):
+    """Per-step profiler marker (``StepTraceAnnotation``) when enabled."""
+    if not enabled():
+        yield
+        return
+    import jax
+
+    with jax.profiler.StepTraceAnnotation(name, step_num=step):
+        yield
+
+
+_PROFILING = False
+
+
+def start_profile(log_dir: str) -> bool:
+    """Begin a ``jax.profiler`` trace dump into ``log_dir`` (idempotent)."""
+    global _PROFILING
+    if _PROFILING:
+        return False
+    import jax
+
+    jax.profiler.start_trace(log_dir)
+    _PROFILING = True
+    log_event("obs.profile_started", log_dir=log_dir)
+    return True
+
+
+def stop_profile() -> bool:
+    """End the running trace dump, if any."""
+    global _PROFILING
+    if not _PROFILING:
+        return False
+    import jax
+
+    jax.profiler.stop_trace()
+    _PROFILING = False
+    log_event("obs.profile_stopped")
+    return True
+
+
+def attach_hlo_report(name: str, hlo_or_lowered, **labels) -> dict:
+    """Log the HLO-predicted collective traffic of a jitted entrypoint.
+
+    ``hlo_or_lowered`` is compiled HLO text, or anything with
+    ``.compile()`` (a ``jax.stages.Lowered``) or ``.as_text()`` (a
+    ``Compiled``).  Returns the stats dict
+    ``{total_bytes, per_op_bytes, op_counts}`` from
+    ``repro.launch.hlo_stats.collective_bytes`` and emits it as an
+    ``hlo.collectives`` event, so runtime per-peer byte counters can be
+    reconciled against the compiler's schedule (the acceptance check in
+    ``tests/_obs_check.py``).
+    """
+    from repro.launch.hlo_stats import collective_bytes
+
+    txt = hlo_or_lowered
+    if hasattr(txt, "compile"):
+        txt = txt.compile()
+    if hasattr(txt, "as_text"):
+        txt = txt.as_text()
+    stats = collective_bytes(txt)
+    log_event(
+        "hlo.collectives",
+        entry=name,
+        total_bytes=stats["total_bytes"],
+        per_op_bytes=stats["per_op_bytes"],
+        op_counts=stats["op_counts"],
+        **labels,
+    )
+    return stats

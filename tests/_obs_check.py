@@ -1,0 +1,298 @@
+"""Observability acceptance checks, run in a subprocess with 8 fake host
+devices.
+
+Invoked by tests/test_obs.py; exits nonzero on any failure.  Covers the
+telemetry subsystem's acceptance criteria end to end:
+
+* an enabled 8-device exchange-strategy sort emits per-device counters:
+  ``exchange.block_elements == N/p`` on every device (Proposition 2 over
+  the wire), per-peer byte vectors that sum to exactly the block's bytes,
+  and splitter round counts equal to their ``ceil(log2(w+1)) + 1`` bound;
+* the runtime byte counters reconcile with the compile-time
+  ``hlo.collectives`` report (``obs.attach_hlo_report`` /
+  ``hlo_stats.collective_op_sizes``): received real + padding slots ==
+  the all-to-all's HLO element count, exactly;
+* ``corank.iterations`` records respect Proposition 1's
+  ``ceil(log2 min(m, n)) + 1`` bound;
+* dropless-MoE dispatch counters: zero ``moe.overflow`` at the safe
+  default capacity, positive and exactly-accounted overflow under an
+  undersized capacity on adversarially skewed routing;
+* the JSONL sink round-trips: every line parses, and the parsed stream
+  contains the Prop-1/Prop-2 evidence above;
+* the disabled trace of the same sharded program contains no callback
+  ``custom-call`` (zero-overhead-off on the distributed path too).
+"""
+
+import json
+import os
+import sys
+import tempfile
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import obs
+from repro.core.compat import shard_map
+from repro.core.corank import co_rank, prop1_bound
+from repro.distributed import sharded_sort
+from repro.distributed.moe import dropless_dispatch
+from repro.launch.hlo_stats import collective_op_sizes
+
+P_DEVICES = 8
+W = 64  # run width per device; N = p * w
+N = P_DEVICES * W
+ITEMSIZE = 4  # int32 payloads throughout
+
+
+def _sort_fn(mesh):
+    return jax.jit(
+        shard_map(
+            lambda s: sharded_sort(s, "x", strategy="exchange"),
+            mesh=mesh,
+            in_specs=(P("x"),),
+            out_specs=P("x"),
+        )
+    )
+
+
+def _by_metric(recs, name):
+    return [r for r in recs if r["metric"] == name]
+
+
+def check_exchange_counters(mesh, rng):
+    """Prop-2 and per-peer byte accounting from a live 8-device sort."""
+    x = rng.integers(-99, 99, N).astype(np.int32)
+    with obs.capture() as recs:
+        out = np.asarray(_sort_fn(mesh)(jnp.asarray(x)))
+        obs.flush()
+        np.testing.assert_array_equal(out, np.sort(x, kind="stable"))
+
+        block = _by_metric(recs, "exchange.block_elements")
+        assert len(block) == P_DEVICES, block
+        assert sorted(r["labels"]["device"] for r in block) == list(
+            range(P_DEVICES)
+        )
+        for r in block:
+            assert r["value"] == W, (
+                f"Prop 2 violated: device {r['labels']['device']} received "
+                f"{r['value']} real elements, want N/p = {W}"
+            )
+
+        peer = _by_metric(recs, "exchange.peer_bytes")
+        assert len(peer) == P_DEVICES
+        for r in peer:
+            v = r["value"]
+            assert len(v) == P_DEVICES and all(b >= 0 for b in v)
+            assert sum(v) == W * ITEMSIZE, (
+                f"per-peer bytes must sum to the block: {v}"
+            )
+        total_recv = sum(sum(r["value"]) for r in peer)
+        assert total_recv == N * ITEMSIZE  # nothing lost, nothing doubled
+
+        for r in _by_metric(recs, "exchange.send_lengths"):
+            assert sum(r["value"]) == W  # every run fully distributed
+
+        for r in _by_metric(recs, "exchange.padding_slots"):
+            cap = r["labels"]["capacity"]
+            assert r["value"] == P_DEVICES * cap - W
+
+        rounds = _by_metric(recs, "splitters.kway_rounds")
+        assert len(rounds) == P_DEVICES
+        for r in rounds:
+            assert r["value"] <= r["labels"]["bound"], r
+            assert r["labels"]["w"] == W
+    print("exchange counters (Prop 2, per-peer bytes, rounds): OK")
+
+
+def check_hlo_reconciliation(mesh, rng):
+    """Runtime byte counters == the compile-time collective schedule."""
+    x = rng.integers(0, 50, N).astype(np.int32)
+    with obs.capture() as recs:
+        fn = _sort_fn(mesh)
+        lowered = fn.lower(jax.ShapeDtypeStruct((N,), jnp.int32))
+        stats = obs.attach_hlo_report("sharded_sort_exchange", lowered)
+        txt = lowered.compile().as_text()
+        np.asarray(fn(jnp.asarray(x)))
+        obs.flush()
+
+        a2a = collective_op_sizes(txt, "all-to-all")
+        assert a2a, "exchange path must lower to all-to-all"
+        slot_elems = max(el for _, el in a2a)
+
+        # Every device's runtime accounting: real rows + padding slots
+        # must equal the static slot matrix the compiler scheduled.
+        blocks = _by_metric(recs, "exchange.block_elements")
+        pads = _by_metric(recs, "exchange.padding_slots")
+        for b, pd in zip(
+            sorted(blocks, key=lambda r: r["labels"]["device"]),
+            sorted(pads, key=lambda r: r["labels"]["device"]),
+        ):
+            assert b["value"] + pd["value"] == slot_elems, (
+                f"runtime {b['value']} + {pd['value']} != "
+                f"HLO slot elements {slot_elems}"
+            )
+
+        events = _by_metric(recs, "hlo.collectives")
+        assert len(events) == 1 and events[0]["kind"] == "event"
+        lbl = events[0]["labels"]
+        assert lbl["entry"] == "sharded_sort_exchange"
+        assert lbl["per_op_bytes"]["all-to-all"] >= slot_elems * ITEMSIZE
+        assert stats["total_bytes"] == lbl["total_bytes"] > 0
+    print(
+        f"HLO reconciliation (slots={slot_elems} elems, "
+        f"predicted {stats['per_op_bytes']['all-to-all']} a2a bytes): OK"
+    )
+
+
+def check_prop1_counters():
+    """Recorded co-rank iteration counts stay within Proposition 1."""
+    rng = np.random.default_rng(3)
+    cases = [(8, 8), (1, 64), (64, 1), (37, 501), (256, 256)]
+    with obs.capture() as recs:
+        for m, n in cases:
+            a = jnp.asarray(np.sort(rng.integers(-50, 50, m)), jnp.int32)
+            b = jnp.asarray(np.sort(rng.integers(-50, 50, n)), jnp.int32)
+            for i in (0, (m + n) // 2, m + n):
+                co_rank(i, a, b)
+        obs.flush()
+        its = _by_metric(recs, "corank.iterations")
+        assert len(its) == 3 * len(cases)
+        for r in its:
+            assert r["max"] <= r["labels"]["bound"] == prop1_bound(
+                r["labels"]["m"], r["labels"]["n"]
+            ), r
+    print("Prop-1 iteration counters within bound: OK")
+
+
+def check_moe_counters(mesh, rng):
+    """Dropless dispatch: zero overflow at safe capacity, accounted
+    overflow under an undersized one."""
+    t, k, d, E = 16, 2, 8, 16
+
+    def dispatch_fn(capacity):
+        def body(xt, experts):
+            plan = dropless_dispatch(
+                xt[0], experts[0], E, "x", capacity=capacity
+            )
+            return plan.group_sizes[None]
+
+        return jax.jit(
+            shard_map(
+                body,
+                mesh=mesh,
+                in_specs=(P("x"), P("x")),
+                out_specs=P("x"),
+            )
+        )
+
+    xt = jnp.asarray(
+        rng.normal(size=(P_DEVICES, t, d)).astype(np.float32)
+    )
+    uniform = jnp.asarray(
+        rng.integers(0, E, (P_DEVICES, t, k)).astype(np.int32)
+    )
+    with obs.capture() as recs:
+        gs = np.asarray(dispatch_fn(None)(xt, uniform))
+        obs.flush()
+        assert gs.sum() == P_DEVICES * t * k  # no token dropped
+        overflow = _by_metric(recs, "moe.overflow")
+        assert len(overflow) == P_DEVICES
+        assert all(r["value"] == 0 for r in overflow)
+        assert obs.totals().get("moe.overflow", 0) == 0
+        group = _by_metric(recs, "moe.group_sizes")
+        assert sum(sum(r["value"]) for r in group) == P_DEVICES * t * k
+        assert len(_by_metric(recs, "moe.routing_skew")) == P_DEVICES
+
+    # Adversarial skew: every token routed to expert 0, so all p*t*k
+    # assignments target device 0; an undersized per-peer capacity must
+    # surface the truncation as exact overflow counts, never silently.
+    skewed = jnp.zeros((P_DEVICES, t, k), jnp.int32)
+    cap = 4
+    with obs.capture() as recs:
+        np.asarray(dispatch_fn(cap)(xt, skewed))
+        obs.flush()
+        dropped = obs.totals()["moe.overflow"]
+        # device 0 receives min(cap, t*k) per source instead of t*k
+        want = P_DEVICES * (t * k - cap)
+        assert dropped == want, (dropped, want)
+        per_source = {
+            r["labels"]["device"]: r["value"]
+            for r in _by_metric(recs, "moe.recv_per_source")
+        }
+        assert per_source[0] == [cap] * P_DEVICES
+        assert all(
+            v == [0] * P_DEVICES for dev, v in per_source.items() if dev
+        )
+    print(f"MoE counters (0 overflow safe, {want} accounted skewed): OK")
+
+
+def check_jsonl_roundtrip(mesh, rng):
+    """The acceptance artifact: an enabled run's metrics.jsonl parses and
+    carries the Prop-1 / Prop-2 / per-peer-bytes evidence."""
+    x = rng.integers(-5, 5, N).astype(np.int32)
+    tmp = tempfile.mkdtemp(prefix="obs_check_")
+    obs.enable(metrics_dir=tmp)
+    try:
+        obs.set_step(7)
+        np.asarray(_sort_fn(mesh)(jnp.asarray(x)))
+        a = jnp.asarray(np.sort(rng.integers(0, 9, 33)), jnp.int32)
+        b = jnp.asarray(np.sort(rng.integers(0, 9, 90)), jnp.int32)
+        co_rank(50, a, b)
+        obs.flush()
+    finally:
+        obs.disable()
+
+    path = os.path.join(tmp, "metrics.jsonl")
+    with open(path, encoding="utf-8") as fh:
+        recs = [json.loads(line) for line in fh if line.strip()]
+    assert recs, f"no records in {path}"
+    assert all(r.get("step") == 7 for r in recs if r["kind"] != "event")
+    blocks = _by_metric(recs, "exchange.block_elements")
+    assert len(blocks) == P_DEVICES
+    assert all(r["value"] == W for r in blocks)
+    for r in _by_metric(recs, "exchange.peer_bytes"):
+        assert sum(r["value"]) == W * ITEMSIZE
+    its = _by_metric(recs, "corank.iterations")
+    assert its and all(r["max"] <= r["labels"]["bound"] for r in its)
+    print(f"JSONL round-trip ({len(recs)} records at {path}): OK")
+
+
+def check_disabled_hlo_clean(mesh):
+    """Zero-overhead-off on the sharded program: no callback custom-call."""
+    assert not obs.enabled()
+    txt = (
+        _sort_fn(mesh)
+        .lower(jax.ShapeDtypeStruct((N,), jnp.int32))
+        .compile()
+        .as_text()
+    )
+    assert "custom-call" not in txt, (
+        "disabled obs must leave no callback ops in the compiled HLO"
+    )
+    print("disabled HLO contains no callback custom-call: OK")
+
+
+def main():
+    devs = jax.devices()
+    assert len(devs) == P_DEVICES, devs
+    mesh = Mesh(np.array(devs), ("x",))
+    rng = np.random.default_rng(0)
+
+    check_exchange_counters(mesh, rng)
+    check_hlo_reconciliation(mesh, rng)
+    check_prop1_counters()
+    check_moe_counters(mesh, rng)
+    check_jsonl_roundtrip(mesh, rng)
+    check_disabled_hlo_clean(mesh)
+    print("ALL OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -260,6 +260,38 @@ def test_merge_kway_pallas_matches_xla_path():
 
 
 # ---------------------------------------------------------------------------
+# Proposition 1 at runtime: the recorded iteration counters
+# ---------------------------------------------------------------------------
+
+
+def test_prop1_runtime_iteration_counters():
+    """The obs-layer ``corank.iterations`` records must respect Prop 1's
+    ``ceil(log2 min(m, n)) + 1`` bound on live searches — the counter the
+    paper's complexity claim is audited with in production runs."""
+    from repro import obs
+    from repro.core.corank import co_rank, prop1_bound
+
+    rng = np.random.default_rng(31)
+    cases = [(1, 1), (2, 7), (8, 8), (33, 7), (128, 128), (5, 1000)]
+    with obs.capture() as recs:
+        for m, n in cases:
+            a = jnp.asarray(np.sort(rng.integers(-50, 50, m)), np.int32)
+            b = jnp.asarray(np.sort(rng.integers(-50, 50, n)), np.int32)
+            for i in (0, 1, (m + n) // 2, m + n - 1, m + n):
+                co_rank(i, a, b)
+        obs.flush()
+        its = [r for r in recs if r["metric"] == "corank.iterations"]
+        assert len(its) == 5 * len(cases)
+        for r in its:
+            m, n = r["labels"]["m"], r["labels"]["n"]
+            assert r["labels"]["bound"] == prop1_bound(m, n)
+            assert r["max"] <= r["labels"]["bound"], (
+                f"Prop 1 violated for (m={m}, n={n}): "
+                f"{r['max']} > {r['labels']['bound']}"
+            )
+
+
+# ---------------------------------------------------------------------------
 # properties (hypothesis when installed, seeded fallback offline)
 # ---------------------------------------------------------------------------
 
