@@ -1,0 +1,103 @@
+"""Benchmark E1 — out-of-core external sort vs in-memory sort.
+
+Sustained elements/sec of ``repro.external.external_sort`` (spill +
+co-rank-streamed k-way merge, end-to-end including host I/O and
+planning) across inputs of 1–8x the configured device chunk, against
+the in-memory ``sort_key_val`` at the same sizes.  On this CPU harness
+"device memory" is simulated by the chunk size; the shape of the result
+— external throughput flat in input size while staying within a small
+constant of the in-memory sort — is the property later hardware PRs
+must preserve.
+
+Derived columns: million elements sorted per second and the slowdown
+vs the in-memory sort of the same input (``vs_inmem``; the acceptance
+bound is 3x at the largest in-memory-comparable size).
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import tempfile
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import TimingStats, row
+from repro.core.mergesort import sort_key_val
+from repro.external.api import external_sort
+
+CHUNK = 1 << 15
+FANOUT = 8
+WINDOW = CHUNK // FANOUT
+
+
+def _time_external(keys, vals, *, iters: int = 3) -> TimingStats:
+    """End-to-end wall time per call; every iteration re-sorts from
+    scratch in a fresh workdir (resume would otherwise short-circuit)."""
+    samples = []
+    for _ in range(iters):
+        workdir = tempfile.mkdtemp(prefix="repro-bench-external-")
+        try:
+            t0 = time.perf_counter()
+            sk, _sv = external_sort(
+                keys, vals, chunk=CHUNK, fanout=FANOUT, window=WINDOW,
+                workdir=workdir,
+            )
+            _ = sk[-1] if len(sk) else None  # touch the mmap tail
+            samples.append((time.perf_counter() - t0) * 1e6)
+        finally:
+            shutil.rmtree(workdir, ignore_errors=True)
+    return TimingStats(samples)
+
+
+def main(json_path: str | None = None):
+    rng = np.random.default_rng(11)
+    records: list[dict] = []
+
+    inmem = jax.jit(sort_key_val)
+    for mult in (1, 2, 4, 8):
+        n = mult * CHUNK
+        keys = rng.integers(0, 1 << 30, n).astype(np.int32)
+        vals = np.arange(n, dtype=np.int32)
+
+        kd, vd = jnp.asarray(keys), jnp.asarray(vals)
+        jax.block_until_ready(inmem(kd, vd))  # warmup / compile
+        samples = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            jax.block_until_ready(inmem(kd, vd))
+            samples.append((time.perf_counter() - t0) * 1e6)
+        us_mem = TimingStats(samples)
+        row(
+            f"external_sort/inmem/{n}", us_mem, f"{n / us_mem:.2f}Melem/s"
+        )
+        records.append({
+            "name": f"external_sort/inmem/{n}", "us_per_call": us_mem,
+            "melem_per_s": n / us_mem, "size": n,
+        })
+
+        us_ext = _time_external(keys, vals)
+        ratio = us_ext / us_mem
+        row(
+            f"external_sort/external/x{mult}/{n}", us_ext,
+            f"{n / us_ext:.2f}Melem/s;vs_inmem={ratio:.2f}x",
+        )
+        records.append({
+            "name": f"external_sort/external/x{mult}/{n}",
+            "us_per_call": us_ext, "melem_per_s": n / us_ext,
+            "size": n, "chunk": CHUNK, "fanout": FANOUT, "window": WINDOW,
+            "vs_inmem": ratio,
+        })
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"records": records}, f, indent=2, sort_keys=True)
+        print(f"# wrote {json_path}", flush=True)
+    return records
+
+
+if __name__ == "__main__":
+    main("BENCH_external.json")

@@ -18,11 +18,13 @@ _REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 MOE_JSON = str(_REPO_ROOT / "BENCH_moe.json")
 KWAY_JSON = str(_REPO_ROOT / "BENCH_kway.json")
+EXTERNAL_JSON = str(_REPO_ROOT / "BENCH_external.json")
 
 
 def main() -> None:
     from benchmarks import (
         corank_bound,
+        external_sort,
         kway_throughput,
         load_balance,
         merge_throughput,
@@ -39,6 +41,8 @@ def main() -> None:
         ("C4: merge throughput vs baselines", merge_throughput.main),
         ("C7: k-way fan-out throughput",
          lambda: kway_throughput.main(KWAY_JSON)),
+        ("E1: out-of-core external sort",
+         lambda: external_sort.main(EXTERNAL_JSON)),
         ("F1: MoE dispatch (framework integration)",
          lambda: moe_dispatch.main(MOE_JSON)),
         ("G: roofline from dry-run artifacts", roofline.main),

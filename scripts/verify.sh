@@ -11,6 +11,10 @@
 #                                    # (tier-1 fails loudly if record points
 #                                    # leak into disabled HLO) + the 8-device
 #                                    # counter/JSONL acceptance run
+#   scripts/verify.sh --external     # out-of-core sort: tmpdir spill files,
+#                                    # small chunks/windows forcing multi-pass
+#                                    # merges, crash-resume + residency bounds;
+#                                    # includes the @slow large sweep
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -33,6 +37,12 @@ case "${1:-}" in
         # The 8-device acceptance run is a child process that forces its own
         # device count; the fast-lane HLO-identity tests run here too.
         exec python -m pytest -q tests/test_obs.py
+        ;;
+    --external)
+        # Spill files land in pytest tmpdirs; the suite's small chunk /
+        # window / fanout settings force >= 2 merge passes everywhere the
+        # multi-pass machinery matters.  Runs the slow sweep too.
+        exec python -m pytest -q tests/test_external.py
         ;;
     *)
         exec python -m pytest -x -q

@@ -162,19 +162,28 @@ def kway_positions(
                 cl = jnp.searchsorted(row, runs[:rp], side="left")
                 cnt = cnt.at[:rp].add(cl.astype(jnp.int32))
     else:
-        # Ragged runs (cold path): per-pair counts must be clipped to the
-        # sibling's real length before summing, so keep the pair matrix.
+        # Ragged runs: same incremental loop, with each source row's
+        # counts clipped at its real length.  Exact because padding is
+        # >= every real element (the row contract): a query can only
+        # tie with padding when it equals the row's maximal real value,
+        # and the clip restores exactly the real count there; padding
+        # is never strictly below any query, so the left side needs no
+        # correction at all (clipped anyway for symmetry).
         lengths = jnp.asarray(lengths, jnp.int32)
-        rp_g, r_g = _pair_counts_matrix(k)
-        ssl = jax.vmap(
-            lambda row: jnp.searchsorted(row, runs, side="left")
-        )(runs).astype(jnp.int32)
-        ssr = jax.vmap(
-            lambda row: jnp.searchsorted(row, runs, side="right")
-        )(runs).astype(jnp.int32)
-        cnt_m = jnp.where(rp_g[..., None] < r_g[..., None], ssr, ssl)
-        cnt_m = jnp.where(rp_g[..., None] == r_g[..., None], 0, cnt_m)
-        cnt = jnp.minimum(cnt_m, lengths[:, None, None]).sum(axis=0)
+        cnt = jnp.zeros((k, w), jnp.int32)
+        for rp in range(k):
+            row = runs[rp]
+            cap = lengths[rp]
+            if rp + 1 < k:
+                cr = jnp.searchsorted(row, runs[rp + 1 :], side="right")
+                cnt = cnt.at[rp + 1 :].add(
+                    jnp.minimum(cr.astype(jnp.int32), cap)
+                )
+            if rp > 0:
+                cl = jnp.searchsorted(row, runs[:rp], side="left")
+                cnt = cnt.at[:rp].add(
+                    jnp.minimum(cl.astype(jnp.int32), cap)
+                )
     return jnp.arange(w, dtype=jnp.int32)[None, :] + cnt
 
 

@@ -17,6 +17,8 @@ Production constraints this implements:
 from __future__ import annotations
 
 import dataclasses
+import os
+import tempfile
 from typing import Iterator
 
 import numpy as np
@@ -34,6 +36,12 @@ class DataConfig:
     mean_doc_len: int = 512
     eos: int = 0
     fanout: int = 0  # length-bucketing merge-sort fan-out; 0 = default
+    # Out-of-core tier (repro.external): windows of >= external_threshold
+    # documents bucket through the spill-to-host external sort instead of
+    # the on-device sort; 0 = always in-memory.  external_workdir holds
+    # the spill files ('' = a per-process temp directory).
+    external_threshold: int = 0
+    external_workdir: str = ""
 
 
 def synthetic_doc(dc: DataConfig, epoch: int, idx: int) -> np.ndarray:
@@ -60,11 +68,41 @@ def synthetic_doc(dc: DataConfig, epoch: int, idx: int) -> np.ndarray:
     return out.astype(np.int32)
 
 
-def bucket_by_length(lengths: np.ndarray, fanout: int = 0) -> np.ndarray:
-    """Stable merge-argsort of document lengths (the paper's sort)."""
+def bucket_by_length(
+    lengths: np.ndarray,
+    fanout: int = 0,
+    *,
+    external_threshold: int = 0,
+    external_workdir: str = "",
+) -> np.ndarray:
+    """Stable merge-argsort of document lengths (the paper's sort).
+
+    Past ``external_threshold`` documents the permutation is computed by
+    the out-of-core tier (``repro.external``): device-sized chunks are
+    sorted and spilled, then co-rank-stream-merged — same stable order,
+    bounded device residency.  Below it (or at 0) the in-memory k-way
+    merge sort runs as before.
+    """
+    n = len(lengths)
+    if external_threshold and n >= external_threshold:
+        from repro.external.api import external_argsort
+
+        workdir = external_workdir or os.path.join(
+            tempfile.gettempdir(), f"repro-external-{os.getpid()}"
+        )
+        # Chunk at half the threshold so crossing it genuinely exercises
+        # the spill+merge path (>= 2 runs) rather than a 1-run no-op.
+        chunk = max(1, external_threshold // 2)
+        order = external_argsort(
+            np.asarray(lengths, np.int32),
+            chunk=chunk,
+            workdir=os.path.join(workdir, "bucket"),
+            resume=False,
+        )
+        return np.asarray(order)
     keys = jnp.asarray(lengths, jnp.int32)
     _, order = sort_key_val(
-        keys, jnp.arange(len(lengths), dtype=jnp.int32), fanout=fanout
+        keys, jnp.arange(n, dtype=jnp.int32), fanout=fanout
     )
     return np.asarray(order)
 
@@ -109,8 +147,14 @@ def batches(dc: DataConfig, *, rank: int = 0, world: int = 1,
         base = (step % (1 << 20)) * docs_per_step * world
         idxs = [base + rank + world * i for i in range(docs_per_step)]
         docs = [synthetic_doc(dc, epoch, i) for i in idxs]
+        workdir = dc.external_workdir and os.path.join(
+            dc.external_workdir, f"rank{rank}"
+        )
         order = bucket_by_length(
-            np.asarray([len(d) for d in docs]), fanout=dc.fanout
+            np.asarray([len(d) for d in docs]),
+            fanout=dc.fanout,
+            external_threshold=dc.external_threshold,
+            external_workdir=workdir,
         )
         docs = [docs[i] for i in order]
         tokens, labels, mask = pack_documents(docs, dc)

@@ -1,0 +1,36 @@
+"""Out-of-core external sort: spill-to-host runs, co-rank-streamed merge.
+
+The dataset-scale tier of the paper's merge machinery (ROADMAP
+"larger-than-memory sort"): inputs that do not fit on-device are sorted
+as device-sized chunks, spilled to host as memory-mapped sorted runs,
+and k-way merged back through the device window by window.  The paper's
+partition-without-merging property is what makes the streaming cheap —
+the exact input cuts of any output window come from a co-rank search
+over run *boundary probes* (O(k) elements resident), never from
+materializing run data.
+
+Public surface: :mod:`repro.external.api` (``external_sort``,
+``external_argsort``); the pieces underneath are
+:mod:`repro.external.runs` (spill segments + the crash-resumable
+``RunSet`` manifest), :mod:`repro.external.planner` (host-side exact
+co-rank cut planner over memory-mapped runs) and
+:mod:`repro.external.merge` (the spill / multi-pass merge driver).
+"""
+
+from repro.external.api import (
+    DEFAULT_FANOUT,
+    external_argsort,
+    external_sort,
+)
+from repro.external.planner import co_rank_kway_host
+from repro.external.runs import Run, RunSet, spill_run
+
+__all__ = [
+    "external_sort",
+    "external_argsort",
+    "DEFAULT_FANOUT",
+    "co_rank_kway_host",
+    "Run",
+    "RunSet",
+    "spill_run",
+]

@@ -1,0 +1,32 @@
+"""Public out-of-core sorting API.
+
+``external_sort(keys, vals, *, fanout, window, workdir)`` — stable
+spill-to-host sort with the same (key, payload) semantics as
+``repro.core.mergesort.sort_key_val``, for inputs larger than one
+device-sized chunk.  ``external_argsort`` is the permutation form the
+data pipeline's length bucketing uses past
+``DataConfig.external_threshold``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.external.merge import DEFAULT_CHUNK, DEFAULT_FANOUT, external_sort
+
+__all__ = ["external_sort", "external_argsort", "DEFAULT_FANOUT",
+           "DEFAULT_CHUNK"]
+
+
+def external_argsort(keys, **kwargs) -> np.ndarray:
+    """Stable out-of-core argsort (``np.argsort(kind='stable')``).
+
+    Accepts every :func:`external_sort` keyword; returns the permutation
+    as a read-only memory-mapped index array (int32 while it fits, int64
+    beyond 2^31 elements).
+    """
+    n = int(keys.shape[0] if hasattr(keys, "shape") else len(keys))
+    idx_dtype = np.int32 if n < (1 << 31) else np.int64
+    idx = np.arange(n, dtype=idx_dtype)
+    _, order = external_sort(keys, idx, **kwargs)
+    return order

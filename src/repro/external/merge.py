@@ -1,0 +1,388 @@
+"""External-sort driver: spill sorted runs, co-rank-stream the merge.
+
+Three phases, all resumable from the :class:`~repro.external.runs.RunSet`
+manifest:
+
+1. **Spill** — device-sized chunks are stably sorted on-device
+   (``sort_key_val`` for pairs, the dispatching ``ops.stable_sort`` for
+   bare keys) and written to host as memory-mapped runs.  Chunk order is
+   run order, so run-index tie-breaking preserves global stability.
+2. **Merge passes** — while more than one run remains, groups of
+   ``fanout`` runs are merged into one output run each.  A group merge
+   streams *output windows* through the device: the planner's host
+   co-rank gives each window its exact ``k`` input slices (probing only
+   boundary elements), the slices are staged into a static
+   ``(k, window)`` sentinel-padded buffer and merged with
+   ``ops.merge_window`` (honoring ``REPRO_MERGE_BACKEND``).  Staging for
+   window ``i+1`` is issued while window ``i``'s merge is still in
+   flight — double-buffered host→device copies — and the device never
+   holds more than two staged windows plus one output window:
+   O(fanout · window) elements, regardless of input size.
+3. **Publish** — the last surviving run is the sorted output; its
+   memory-mapped arrays are returned without materializing them.
+
+Fanout caps the per-pass device tail: a pass stages at most
+``2 · fanout · window`` input elements, so any run count is handled by
+``ceil(log_fanout(n_runs))`` passes instead of one wide merge that
+wouldn't fit.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import math
+import os
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import obs
+from repro.core.mergesort import sentinel_max, sort_key_val_jit
+from repro.external import planner
+from repro.external.runs import Run, RunSet, spill_run
+from repro.kernels import ops
+
+__all__ = ["external_sort", "DEFAULT_FANOUT", "DEFAULT_CHUNK"]
+
+# Runs merged per pass.  8 keeps a pass's staged tail (2·fanout·window
+# elements) comfortably under one chunk at the default window while
+# needing only log8 passes; callers tune it per device-memory budget.
+DEFAULT_FANOUT = 8
+DEFAULT_CHUNK = 1 << 18
+
+
+def _np_sentinel(dtype) -> np.generic:
+    return np.asarray(sentinel_max(np.dtype(dtype)))
+
+
+def _fingerprint(keys, n: int) -> str:
+    """Cheap input identity for resume safety: strided sample digest."""
+    if n == 0:
+        return "empty"
+    stride = max(1, n // 64)
+    sample = np.ascontiguousarray(np.asarray(keys[::stride][:65]))
+    return hashlib.sha1(sample.tobytes()).hexdigest()[:16]
+
+
+def external_sort(
+    keys,
+    vals=None,
+    *,
+    chunk: int = DEFAULT_CHUNK,
+    fanout: int = 0,
+    window: int = 0,
+    workdir: str,
+    backend: str | None = None,
+    resume: bool = True,
+    cleanup: bool = True,
+    on_window=None,
+):
+    """Stable out-of-core sort of ``keys`` (and a payload) by spill+merge.
+
+    Args:
+      keys: 1-D array-like, sliced chunk-by-chunk (an ``np.memmap`` works;
+        the whole input is never copied at once).
+      vals: optional same-length payload carried through the stable
+        permutation (``np.argsort(kind='stable')`` semantics).
+      chunk: elements sorted on-device per spill — the device-memory
+        proxy; at most one chunk is resident during phase 1.
+      fanout: runs merged per pass (>= 2; 0 = ``DEFAULT_FANOUT``).
+      window: output elements streamed per merge step (0 = ``chunk //
+        fanout``, which caps merge-phase residency at about one chunk).
+      workdir: spill directory; created if missing.  Holds the run files
+        and the crash-resume manifest.
+      backend: merge backend override forwarded to ``ops.merge_window``
+        (None = auto / ``REPRO_MERGE_BACKEND``).
+      resume: pick up a matching interrupted sort from ``workdir``'s
+        manifest instead of restarting (mismatched input or parameters
+        always restart).
+      cleanup: delete intermediate runs once sorted (the final output
+        files always remain — they back the returned arrays).
+      on_window: optional ``f(out_pass, group, window_idx)`` progress
+        hook, called after each window is durable (tests use it to
+        inject crashes).
+
+    Returns:
+      The sorted keys as a read-only memory-mapped array, or ``(keys,
+      vals)`` when a payload was given.
+    """
+    n = int(keys.shape[0] if hasattr(keys, "shape") else len(keys))
+    if vals is not None:
+        vn = int(vals.shape[0] if hasattr(vals, "shape") else len(vals))
+        if vn != n:
+            raise ValueError(f"keys/vals length mismatch: {n} vs {vn}")
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    fanout = fanout or DEFAULT_FANOUT
+    if fanout < 2:
+        raise ValueError(f"fanout must be >= 2 (or 0 for default), got {fanout}")
+    window = window or max(1, chunk // fanout)
+
+    meta = {
+        "n": n,
+        "chunk": int(chunk),
+        "window": int(window),
+        "fanout": int(fanout),
+        "key_dtype": str(np.asarray(keys[:0]).dtype),
+        "val_dtype": None if vals is None else str(np.asarray(vals[:0]).dtype),
+        "fingerprint": _fingerprint(keys, n),
+    }
+
+    os.makedirs(workdir, exist_ok=True)
+    rs = RunSet.load(workdir) if resume else None
+    if rs is not None and not rs.matches(meta):
+        rs = None  # different input/parameters: stale state, restart
+    if rs is None:
+        rs = RunSet(workdir, meta)
+        rs.save()
+
+    with obs.host_span("repro.external_sort"):
+        if rs.done is None:
+            _spill_phase(keys, vals, rs, chunk=chunk, backend=backend)
+            final = _merge_phases(
+                rs,
+                fanout=fanout,
+                window=window,
+                backend=backend,
+                on_window=on_window,
+            )
+        else:
+            final = rs.done
+
+    if cleanup:
+        keep = {final.key_path, final.val_path}
+        for path in rs.run_files() - keep:
+            if path and os.path.exists(path):
+                os.remove(path)
+
+    if vals is None:
+        return final.keys()
+    return final.keys(), final.vals()
+
+
+# ---------------------------------------------------------------------------
+# phase 1: chunk sort + spill
+# ---------------------------------------------------------------------------
+
+
+def _spill_phase(keys, vals, rs: RunSet, *, chunk: int, backend) -> None:
+    n = rs.meta["n"]
+    n_chunks = max(1, math.ceil(n / chunk))  # n == 0 spills one empty run
+    for ci in range(rs.chunks_done, n_chunks):
+        lo, hi = ci * chunk, min(n, (ci + 1) * chunk)
+        k_host = np.asarray(keys[lo:hi])
+        if vals is not None:
+            v_host = np.asarray(vals[lo:hi])
+        if obs.enabled():
+            resident = k_host.nbytes + (
+                v_host.nbytes if vals is not None else 0
+            )
+            obs.gauge(
+                "external.device_resident_bytes", resident,
+                phase="chunk_sort",
+            )
+        if hi > lo:
+            if vals is None:
+                k_np = np.asarray(ops.stable_sort(
+                    jnp.asarray(k_host), backend=backend
+                ))
+                v_np = None
+            else:
+                sk, sv = sort_key_val_jit(
+                    jnp.asarray(k_host), jnp.asarray(v_host)
+                )
+                k_np, v_np = np.asarray(sk), np.asarray(sv)
+        else:
+            k_np = k_host
+            v_np = None if vals is None else v_host
+        run = spill_run(rs.workdir, f"run_p0_c{ci:05d}", k_np, v_np)
+        rs.add_chunk_run(run)  # saves the manifest
+
+
+# ---------------------------------------------------------------------------
+# phase 2: multi-pass co-rank-streamed k-way merge
+# ---------------------------------------------------------------------------
+
+
+def _merge_phases(
+    rs: RunSet, *, fanout: int, window: int, backend, on_window
+) -> Run:
+    p = 0
+    while True:
+        cur = rs.level_runs(p)
+        if len(cur) == 1:
+            rs.done = cur[0]
+            rs.save()
+            if obs.enabled():
+                obs.gauge("external.merge_passes", p)
+            return cur[0]
+        groups = [cur[i : i + fanout] for i in range(0, len(cur), fanout)]
+        outs = rs.level_runs(p + 1)
+        for gi in range(len(outs), len(groups)):
+            group = groups[gi]
+            if len(group) == 1:
+                out = group[0]  # odd tail rides through unchanged
+            else:
+                out = _merge_group(
+                    rs, p + 1, gi, group,
+                    window=window, backend=backend, on_window=on_window,
+                )
+            rs.complete_group(p + 1, out)  # saves the manifest
+        p += 1
+
+
+def _merge_group(
+    rs: RunSet,
+    out_pass: int,
+    gi: int,
+    group: list[Run],
+    *,
+    window: int,
+    backend,
+    on_window,
+) -> Run:
+    k = len(group)
+    key_views = [r.keys() for r in group]
+    has_vals = group[0].val_path is not None
+    val_views = [r.vals() for r in group] if has_vals else None
+    lengths = np.asarray([r.length for r in group], np.int64)
+    total = int(lengths.sum())
+    key_dtype = np.dtype(group[0].key_dtype)
+    val_dtype = np.dtype(group[0].val_dtype) if has_vals else None
+    sentinel = _np_sentinel(key_dtype)
+
+    name = f"run_p{out_pass}_g{gi:05d}"
+    out_key = os.path.join(rs.workdir, name + ".keys.npy")
+    out_val = os.path.join(rs.workdir, name + ".vals.npy")
+    tmp_key, tmp_val = out_key + ".part.npy", out_val + ".part.npy"
+
+    # Resume bookkeeping: a matching in-progress merge restarts at its
+    # recorded window; anything else restarts the group from scratch.
+    state = rs.merge
+    if not (
+        state
+        and state.get("out_pass") == out_pass
+        and state.get("group") == gi
+        and state.get("length") == total
+        and os.path.exists(tmp_key)
+        and (not has_vals or os.path.exists(tmp_val))
+    ):
+        state = {
+            "out_pass": out_pass,
+            "group": gi,
+            "windows_done": 0,
+            "length": total,
+        }
+        for path in (tmp_key, tmp_val):
+            if os.path.exists(path):
+                os.remove(path)
+
+    def _open_out(path, dtype):
+        mode = "r+" if os.path.exists(path) else "w+"
+        m = np.lib.format.open_memmap(
+            path, mode=mode, dtype=dtype, shape=(max(total, 1),)
+        )
+        return m
+
+    out_k = _open_out(tmp_key, key_dtype)
+    out_v = _open_out(tmp_val, val_dtype) if has_vals else None
+
+    n_windows = math.ceil(total / window) if total else 0
+    start_w = min(int(state["windows_done"]), n_windows)
+    cut_lo = planner.co_rank_kway_host(start_w * window, key_views, lengths)
+
+    t_wait = 0.0  # blocked on device results
+    t_overlap = 0.0  # staging time hidden behind an in-flight merge
+
+    def _stage(wi: int, lo_cuts: np.ndarray):
+        """Slice window ``wi``'s inputs and start the host→device copy."""
+        end = min(total, (wi + 1) * window)
+        hi_cuts = planner.co_rank_kway_host(end, key_views, lengths)
+        seg = (hi_cuts - lo_cuts).astype(np.int64)
+        kbuf = np.full((k, window), sentinel, key_dtype)
+        vbuf = np.zeros((k, window), val_dtype) if has_vals else None
+        for q in range(k):
+            if seg[q]:
+                kbuf[q, : seg[q]] = key_views[q][lo_cuts[q] : hi_cuts[q]]
+                if has_vals:
+                    vbuf[q, : seg[q]] = val_views[q][lo_cuts[q] : hi_cuts[q]]
+        dev = (
+            jax.device_put(kbuf),
+            jax.device_put(vbuf) if has_vals else None,
+            jax.device_put(seg.astype(np.int32)),
+        )
+        return {"wi": wi, "end": end, "hi_cuts": hi_cuts, "dev": dev}
+
+    staged = _stage(start_w, cut_lo) if start_w < n_windows else None
+    for wi in range(start_w, n_windows):
+        cur = staged
+        dk, dv, dl = cur["dev"]
+        merged = ops.merge_window(
+            dk, dv, dl, out_len=window, backend=backend
+        )  # dispatched async; staging below overlaps it
+        t0 = time.perf_counter()
+        staged = (
+            _stage(wi + 1, cur["hi_cuts"]) if wi + 1 < n_windows else None
+        )
+        t_overlap += time.perf_counter() - t0
+        if obs.enabled():
+            mk = merged[0] if has_vals else merged
+            resident = dk.nbytes + dl.nbytes + mk.nbytes
+            if has_vals:
+                resident += dv.nbytes + merged[1].nbytes
+            if staged is not None:
+                sk, sv, sl = staged["dev"]
+                resident += sk.nbytes + sl.nbytes
+                if has_vals:
+                    resident += sv.nbytes
+            obs.gauge(
+                "external.device_resident_bytes", resident, phase="merge",
+                k=k,
+            )
+        t0 = time.perf_counter()
+        if has_vals:
+            mk_host, mv_host = np.asarray(merged[0]), np.asarray(merged[1])
+        else:
+            mk_host = np.asarray(merged)
+        t_wait += time.perf_counter() - t0
+
+        lo_rank = wi * window
+        count = cur["end"] - lo_rank
+        out_k[lo_rank : cur["end"]] = mk_host[:count]
+        out_k.flush()
+        if has_vals:
+            out_v[lo_rank : cur["end"]] = mv_host[:count]
+            out_v.flush()
+        # Data is durable before the manifest advances: a crash here
+        # re-merges (idempotently) at most this window.
+        state["windows_done"] = wi + 1
+        rs.merge = state
+        rs.save()
+        if obs.enabled():
+            obs.counter("external.windows_merged", 1)
+        if on_window is not None:
+            on_window(out_pass, gi, wi)
+        cut_lo = cur["hi_cuts"]
+
+    if obs.enabled():
+        denom = t_overlap + t_wait
+        obs.gauge(
+            "external.copy_compute_overlap",
+            (t_overlap / denom) if denom > 0 else 0.0,
+            k=k,
+        )
+
+    del out_k, out_v  # flush + close before publishing
+    os.replace(tmp_key, out_key)
+    if has_vals:
+        os.replace(tmp_val, out_val)
+    return Run(
+        key_path=out_key,
+        length=total,
+        key_dtype=str(key_dtype),
+        val_path=out_val if has_vals else None,
+        val_dtype=str(val_dtype) if has_vals else None,
+    )

@@ -1,0 +1,108 @@
+"""Co-rank cut planner: exact window slices over run *boundary probes*.
+
+The paper's central property — co-ranks give the exact input cuts of any
+output prefix *without merging* — is what makes external merge passes
+cheap: to stream output window ``[lo, hi)`` through the device, the
+driver only needs the cut vectors ``J(lo)`` and ``J(hi)``; the window's
+inputs are exactly ``runs[r][J(lo)_r : J(hi)_r]`` and they sum to
+``hi - lo``.
+
+:func:`co_rank_kway_host` is the host-side mirror of
+``repro.core.kway.co_rank_kway`` (same lock-step binary search, same
+"run index breaks ties" Lemma-1 side pair) operating on *memory-mapped*
+runs: per round it materializes only the ``k`` candidate boundary
+elements — the O(k) residency bound the streaming merger advertises —
+and issues ``2·k²`` ``searchsorted`` probes, each a binary search whose
+element reads fault in single pages of the mmap.  No run data is ever
+loaded; the planner's footprint is independent of run length.
+
+Cost per cut: ``ceil(log2 w)+1`` rounds × ``O(k² log w)`` probed
+elements — scalars, vs the ``O(total)`` a merge would touch.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro import obs
+
+__all__ = ["co_rank_kway_host", "window_ranks"]
+
+
+def co_rank_kway_host(
+    i: int,
+    runs: list[np.ndarray],
+    lengths: np.ndarray | None = None,
+) -> np.ndarray:
+    """Exact cut vector ``J(i)`` of output rank ``i`` into ``runs``.
+
+    Args:
+      i: output rank, clamped to ``[0, sum(lengths)]``.
+      runs: ``k`` sorted 1-D array-likes (typically ``np.memmap``); only
+        boundary elements are probed, nothing is copied.
+      lengths: optional real lengths (defaults to ``len(runs[r])``);
+        as in ``co_rank_kway``, rows longer than their real length must
+        stay sorted over their full extent (pad with values >= every
+        real element) — spilled runs are exact-length, so the default
+        always satisfies this.
+
+    Returns:
+      int64 ``(k,)`` cuts with ``J.sum() == min(i, total)``; the stable
+      k-way merge (run index breaks ties) of ``runs[r][:J_r]`` is
+      exactly the first ``i`` merged elements.
+    """
+    k = len(runs)
+    if lengths is None:
+        lengths = np.asarray([len(r) for r in runs], np.int64)
+    else:
+        lengths = np.asarray(lengths, np.int64)
+    total = int(lengths.sum())
+    i = min(max(int(i), 0), total)
+    lo = np.zeros(k, np.int64)
+    if k == 0 or i == 0:
+        return lo
+    hi = lengths.copy()
+    w = int(lengths.max())
+    rounds = max(1, w).bit_length() + 1
+    rp = np.arange(k)[:, None]
+    r = np.arange(k)[None, :]
+
+    for _ in range(rounds):
+        mid = (lo + hi) // 2
+        # The k candidate boundary elements — the only values resident.
+        x = np.empty(k, dtype=np.asarray(runs[0][:0]).dtype)
+        for q in range(k):
+            x[q] = runs[q][min(int(mid[q]), int(lengths[q]) - 1)] if (
+                lengths[q]
+            ) else 0
+        # merged rank of (r, mid_r): mid_r + Lemma-1 counts into every
+        # sibling — ties count toward earlier runs (<= before, < after).
+        cr = np.stack(
+            [np.searchsorted(runs[q], x, side="right") for q in range(k)]
+        ).astype(np.int64)
+        cl = np.stack(
+            [np.searchsorted(runs[q], x, side="left") for q in range(k)]
+        ).astype(np.int64)
+        cnt = np.where(rp < r, cr, cl)
+        cnt = np.minimum(cnt, lengths[:, None])  # never count padding
+        cnt = np.where(rp == r, 0, cnt)
+        rank = mid + cnt.sum(axis=0)
+        pred = (mid < lengths) & (rank < i)
+        lo = np.where(pred, mid + 1, lo)
+        hi = np.where(pred, hi, mid)
+
+    if obs.enabled():
+        # The planner's whole residency: k candidate elements per round
+        # (the O(k) bound); searchsorted probes touch pages transiently.
+        obs.gauge("external.resident_boundary_elems", k, bound=k)
+        obs.counter("external.plan_probes", k * rounds)
+    return lo
+
+
+def window_ranks(total: int, window: int) -> list[tuple[int, int]]:
+    """Output-rank intervals ``[lo, hi)`` covering ``[0, total)``."""
+    if total <= 0:
+        return []
+    return [
+        (s, min(total, s + window)) for s in range(0, total, window)
+    ]

@@ -1,0 +1,211 @@
+"""Sorted-run spill segments and the crash-resumable ``RunSet`` manifest.
+
+A *run* is one sorted (key, payload) segment spilled to host storage as
+memory-mapped ``.npy`` files — the standard numpy header is the "small
+header" (dtype, length) and ``np.load(mmap_mode='r')`` reopens a segment
+without reading it.  Spills are atomic (write to a ``.tmp`` sibling,
+``os.replace``), so a crash mid-spill never leaves a half-run that looks
+valid.
+
+The :class:`RunSet` manifest (``runset.json``, also written atomically)
+records everything the multi-pass merge needs to resume after a crash:
+
+* ``meta`` — the sort parameters and an input fingerprint; a resume with
+  different input or parameters discards the stale state.
+* ``chunks_done`` — how many device-sized chunks were sorted + spilled
+  (phase 1 restarts after the last complete chunk).
+* ``passes`` — the completed runs of every merge level; level 0 is the
+  spilled chunks, level ``p+1`` holds the outputs of merging level
+  ``p`` in groups of ``fanout``.
+* ``merge`` — the in-progress group merge: output level/group, the
+  partially-written output segment and how many output windows of it
+  are already complete.  Window writes are idempotent (the co-rank plan
+  makes window ``i``'s content a pure function of the inputs), so the
+  manifest only needs to be durably *behind* the data: windows are
+  flushed before ``windows_done`` advances, and a torn window is simply
+  re-merged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from repro import obs
+
+__all__ = ["Run", "RunSet", "spill_run", "MANIFEST_NAME"]
+
+MANIFEST_NAME = "runset.json"
+
+
+@dataclasses.dataclass(frozen=True)
+class Run:
+    """One sorted spill segment: mmap-openable key (and payload) files."""
+
+    key_path: str
+    length: int
+    key_dtype: str
+    val_path: str | None = None
+    val_dtype: str | None = None
+
+    def keys(self) -> np.ndarray:
+        """Memory-mapped (read-only) key segment; reads fault pages in."""
+        return np.load(self.key_path, mmap_mode="r")
+
+    def vals(self) -> np.ndarray | None:
+        if self.val_path is None:
+            return None
+        return np.load(self.val_path, mmap_mode="r")
+
+    @property
+    def nbytes(self) -> int:
+        n = self.length * np.dtype(self.key_dtype).itemsize
+        if self.val_path is not None:
+            n += self.length * np.dtype(self.val_dtype).itemsize
+        return n
+
+    def to_json(self, workdir: str) -> dict:
+        rel = lambda p: None if p is None else os.path.relpath(p, workdir)
+        return {
+            "key_path": rel(self.key_path),
+            "length": self.length,
+            "key_dtype": self.key_dtype,
+            "val_path": rel(self.val_path),
+            "val_dtype": self.val_dtype,
+        }
+
+    @staticmethod
+    def from_json(d: dict, workdir: str) -> "Run":
+        absp = lambda p: None if p is None else os.path.join(workdir, p)
+        return Run(
+            key_path=absp(d["key_path"]),
+            length=int(d["length"]),
+            key_dtype=d["key_dtype"],
+            val_path=absp(d["val_path"]),
+            val_dtype=d["val_dtype"],
+        )
+
+
+def _atomic_save(path: str, arr: np.ndarray) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.save(f, arr)
+    os.replace(tmp, path)
+
+
+def spill_run(
+    workdir: str,
+    name: str,
+    keys: np.ndarray,
+    vals: np.ndarray | None = None,
+) -> Run:
+    """Atomically write one sorted run; returns its :class:`Run` handle."""
+    key_path = os.path.join(workdir, name + ".keys.npy")
+    _atomic_save(key_path, keys)
+    val_path = val_dtype = None
+    if vals is not None:
+        val_path = os.path.join(workdir, name + ".vals.npy")
+        _atomic_save(val_path, vals)
+        val_dtype = str(vals.dtype)
+    run = Run(
+        key_path=key_path,
+        length=int(keys.shape[0]),
+        key_dtype=str(keys.dtype),
+        val_path=val_path,
+        val_dtype=val_dtype,
+    )
+    if obs.enabled():
+        obs.counter("external.runs_spilled", 1)
+        obs.counter("external.bytes_spilled", run.nbytes)
+    return run
+
+
+class RunSet:
+    """Manifest-backed state of one external sort inside ``workdir``."""
+
+    def __init__(self, workdir: str, meta: dict):
+        self.workdir = workdir
+        self.meta = dict(meta)
+        self.chunks_done: int = 0
+        self.passes: dict[int, list[Run]] = {0: []}
+        # In-progress group merge: {"out_pass", "group", "windows_done",
+        # "out_name", "length"} or None.
+        self.merge: dict | None = None
+        self.done: Run | None = None
+
+    # -- persistence --------------------------------------------------------
+
+    @property
+    def manifest_path(self) -> str:
+        return os.path.join(self.workdir, MANIFEST_NAME)
+
+    def save(self) -> None:
+        state = {
+            "version": 1,
+            "meta": self.meta,
+            "chunks_done": self.chunks_done,
+            "passes": {
+                str(p): [r.to_json(self.workdir) for r in rs]
+                for p, rs in self.passes.items()
+            },
+            "merge": self.merge,
+            "done": None if self.done is None else self.done.to_json(
+                self.workdir
+            ),
+        }
+        tmp = self.manifest_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(state, f, indent=1, sort_keys=True)
+        os.replace(tmp, self.manifest_path)
+
+    @classmethod
+    def load(cls, workdir: str) -> "RunSet | None":
+        path = os.path.join(workdir, MANIFEST_NAME)
+        if not os.path.exists(path):
+            return None
+        try:
+            with open(path) as f:
+                state = json.load(f)
+        except (OSError, ValueError):
+            return None  # torn manifest: treat as absent, restart
+        rs = cls(workdir, state.get("meta", {}))
+        rs.chunks_done = int(state.get("chunks_done", 0))
+        rs.passes = {
+            int(p): [Run.from_json(d, workdir) for d in runs]
+            for p, runs in state.get("passes", {"0": []}).items()
+        }
+        rs.merge = state.get("merge")
+        done = state.get("done")
+        rs.done = None if done is None else Run.from_json(done, workdir)
+        return rs
+
+    def matches(self, meta: dict) -> bool:
+        """True iff the stored state belongs to this exact sort call."""
+        return self.meta == meta
+
+    # -- merge-state helpers -------------------------------------------------
+
+    def level_runs(self, p: int) -> list[Run]:
+        return self.passes.setdefault(p, [])
+
+    def add_chunk_run(self, run: Run) -> None:
+        self.passes.setdefault(0, []).append(run)
+        self.chunks_done += 1
+        self.save()
+
+    def complete_group(self, out_pass: int, run: Run) -> None:
+        self.passes.setdefault(out_pass, []).append(run)
+        self.merge = None
+        self.save()
+
+    def run_files(self) -> set[str]:
+        out: set[str] = set()
+        for rs in self.passes.values():
+            for r in rs:
+                out.add(r.key_path)
+                if r.val_path:
+                    out.add(r.val_path)
+        return out

@@ -230,9 +230,10 @@ def _lane_count_search(win, off, limit, x, le, s: int, width: int | None = None)
 
 def merge_kway_tile_kernel(
     cb_ref,  # (k, G+1) scalar-prefetch: per-run co-rank boundaries
-    *refs,  # 2k VMEM (1, S) input blocks, then the (1, S) output tile
+    *refs,  # 2k key (+ 2k payload) VMEM (1, S) blocks, then the outputs
     k: int,
     tile: int,
+    has_vals: bool = False,
 ):
     """Merge one output tile of the k-way merge.
 
@@ -242,10 +243,16 @@ def merge_kway_tile_kernel(
     binary-searches those rank vectors for its cut ``j_q(t)`` and takes
     the k-finger minimum with run-index tie-break.  No scalar loop over
     elements ever runs.
+
+    With ``has_vals`` the refs carry a second set of 2k payload blocks
+    (same index maps) and a second output tile: the winning run index
+    and its cut, already computed for the key decision, select the
+    payload — the permutation costs no extra search rounds.
     """
     s = tile
     r = pl.program_id(0)
-    out_ref = refs[2 * k]
+    n_in = 4 * k if has_vals else 2 * k
+    out_ref = refs[n_in]
     t = lax.broadcasted_iota(jnp.int32, (1, s), 1)  # output lanes 0..S-1
 
     wins, offs, lens = [], [], []
@@ -278,7 +285,8 @@ def merge_kway_tile_kernel(
 
     # Output lane t: j_q(t) = |{u : rank_q[u] < t}| via the same per-lane
     # count search on the (sorted) rank vector, then the k-finger decision.
-    best_val = best_ok = None
+    best_val = best_ok = best_q = None
+    jqs = []
     for q in range(k):
         jq = _lane_count_search(
             ranks[q], jnp.int32(0), jnp.int32(s), t, le=False, s=s, width=s
@@ -289,11 +297,28 @@ def merge_kway_tile_kernel(
         avail = jq < lens[q]
         if best_val is None:
             best_val, best_ok = val, avail
+            best_q = jnp.zeros_like(t)
         else:
             better = avail & (~best_ok | (val < best_val))
             best_val = jnp.where(better, val, best_val)
+            best_q = jnp.where(better, jnp.int32(q), best_q)
             best_ok = best_ok | avail
+        jqs.append(jq)
     out_ref[...] = best_val
+
+    if has_vals:
+        out_val_ref = refs[n_in + 1]
+        out_v = jnp.zeros(t.shape, out_val_ref.dtype)
+        for q in range(k):
+            vwin = jnp.concatenate(
+                [refs[2 * k + 2 * q][...], refs[2 * k + 2 * q + 1][...]],
+                axis=1,
+            )
+            v = jnp.take_along_axis(
+                vwin, jnp.clip(offs[q] + jqs[q], 0, 2 * s - 1), axis=1
+            )
+            out_v = jnp.where(best_ok & (best_q == q), v, out_v)
+        out_val_ref[...] = out_v
 
 
 @functools.partial(
@@ -301,21 +326,34 @@ def merge_kway_tile_kernel(
 )
 def merge_kway_pallas(
     runs: jax.Array,
+    vals: jax.Array | None = None,
     *,
+    lengths: jax.Array | None = None,
     tile: int = 512,
     interpret: bool = True,
     dimension_semantics: str = "arbitrary",
-) -> jax.Array:
+):
     """Stable merge of ``k`` sorted runs with one Pallas pass.
 
     Args:
       runs: ``(k, w)`` array, rows sorted ascending (pad ragged runs
         with dtype-max sentinels upstream; sentinels merge to the tail).
+      vals: optional ``(k, w)`` payload carried through the merge
+        permutation (the external sort's window path); doubles the
+        staged blocks, adds no search rounds.
+      lengths: optional ``(k,)`` real row lengths.  Rows must stay
+        sorted over their full width (sentinel padding).  The tile
+        boundaries are then co-ranked against the *real* elements only,
+        so padding never interleaves with real dtype-max keys; output
+        positions ``>= lengths.sum()`` are unspecified — callers slice.
       tile: output elements per grid cell (S); multiple of 128 on real
         TPUs.
       interpret: run the kernel body in interpret mode (CPU validation).
       dimension_semantics: grid axis annotation; tiles are independent
         so 'parallel' is sound.
+
+    Returns the merged ``(k*w,)`` keys, or ``(keys, vals)`` with a
+    payload.
 
     The k-way generalisation of ``merge_pallas``: phase 1 cuts all
     ``G+1`` tile boundaries into every run at once (multi-way co-rank),
@@ -334,9 +372,11 @@ def merge_kway_pallas(
     total = k * w2
     g = total // s
 
-    # Phase 1: multi-way co-rank of the G+1 tile boundaries.
+    # Phase 1: multi-way co-rank of the G+1 tile boundaries (ragged rows
+    # clamp at their real lengths, exactly as in core.kway).
+    lengths = None if lengths is None else jnp.asarray(lengths, jnp.int32)
     bounds = jnp.asarray([r * s for r in range(g + 1)], jnp.int32)
-    cb = co_rank_kway_batch(bounds, runs_log).T  # (k, G+1)
+    cb = co_rank_kway_batch(bounds, runs_log, lengths).T  # (k, G+1)
 
     # Physical padding: two extra S-blocks per run so block q+1 of the
     # staged window is always in range.
@@ -349,19 +389,50 @@ def merge_kway_pallas(
             (1, s), lambda r, cb, q=q, plus=plus: (q, cb[q, r] // s + plus)
         )
 
+    key_specs = [_spec(q, plus) for q in range(k) for plus in (0, 1)]
+    if vals is None:
+        in_specs = key_specs
+        operands = [runs_phys] * (2 * k)
+        out_shape = jax.ShapeDtypeStruct((1, total), dtype)
+        out_specs = pl.BlockSpec((1, s), lambda r, cb: (0, r))
+    else:
+        vals_phys = jnp.concatenate(
+            [
+                vals,
+                jnp.zeros((k, w2 - w + 2 * s), vals.dtype),
+            ],
+            axis=1,
+        )
+        in_specs = key_specs + [
+            _spec(q, plus) for q in range(k) for plus in (0, 1)
+        ]
+        operands = [runs_phys] * (2 * k) + [vals_phys] * (2 * k)
+        out_shape = (
+            jax.ShapeDtypeStruct((1, total), dtype),
+            jax.ShapeDtypeStruct((1, total), vals.dtype),
+        )
+        out_specs = (
+            pl.BlockSpec((1, s), lambda r, cb: (0, r)),
+            pl.BlockSpec((1, s), lambda r, cb: (0, r)),
+        )
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(g,),
-        in_specs=[_spec(q, plus) for q in range(k) for plus in (0, 1)],
-        out_specs=pl.BlockSpec((1, s), lambda r, cb: (0, r)),
+        in_specs=in_specs,
+        out_specs=out_specs,
     )
     out = pl.pallas_call(
-        functools.partial(merge_kway_tile_kernel, k=k, tile=s),
+        functools.partial(
+            merge_kway_tile_kernel, k=k, tile=s, has_vals=vals is not None
+        ),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((1, total), dtype),
+        out_shape=out_shape,
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=(dimension_semantics,),
         ),
-    )(cb, *([runs_phys] * (2 * k)))
-    return out[0, : k * w]
+    )(cb, *operands)
+    if vals is None:
+        return out[0, : k * w]
+    return out[0][0, : k * w], out[1][0, : k * w]

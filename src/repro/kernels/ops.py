@@ -13,6 +13,17 @@ Pallas kernel on a non-TPU backend (``interpret=False``) is an error, not
 a silent mis-dispatch.  The env var is read at trace time: cached
 compilations keyed on ``backend=None`` keep the policy they were traced
 under.
+
+The out-of-core path (``repro.external``) merges every output window
+through :func:`merge_window`, which resolves its backend through the
+same ``_dispatch`` — so ``REPRO_MERGE_BACKEND`` governs the external
+merge exactly like the in-memory entry points (``pallas`` routes the
+window through the k-way tile kernel with its payload/lengths extension,
+interpret-resolved off-TPU rather than hardcoded; ``xla`` /
+``xla_native`` take the ranked scatter merge).  Because the driver
+passes ``backend=None`` into a jitted entry, the trace-time-read caveat
+above applies to external merges too: flip the env var before the first
+window, not mid-sort.
 """
 
 from __future__ import annotations
@@ -30,6 +41,7 @@ from repro.kernels.merge import merge_kway_pallas, merge_pallas
 __all__ = [
     "stable_merge",
     "stable_merge_kway",
+    "merge_window",
     "stable_sort",
     "default_backend",
     "BACKEND_ENV_VAR",
@@ -158,6 +170,54 @@ def stable_merge_kway(
                 runs, tile=tile, interpret=_resolve_interpret(interpret)
             )
         return merge_kway_ranked(runs)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("backend", "tile", "interpret", "out_len")
+)
+def merge_window(
+    runs: jax.Array,
+    vals: jax.Array | None = None,
+    lengths: jax.Array | None = None,
+    *,
+    out_len: int | None = None,
+    backend: str | None = None,
+    tile: int = 512,
+    interpret: bool | None = None,
+):
+    """Stable ragged k-way merge of one external-sort output window.
+
+    ``runs``: ``(k, w)`` sentinel-padded sorted rows; ``lengths``: real
+    row lengths (the co-rank window slices); ``vals``: optional payload
+    carried through the permutation.  Returns the first ``out_len``
+    merged elements (``k*w`` when unset); with ``lengths``, positions
+    ``>= lengths.sum()`` are backend-dependent filler — callers slice to
+    the real count.
+
+    backend: 'pallas' (k-way tile kernel with the payload/lengths
+    extension; interpret-resolved off-TPU) or 'xla' (ranked scatter
+    merge), None = auto — the same ``REPRO_MERGE_BACKEND`` policy as
+    every other entry point, so the external path honors the fleet-wide
+    override instead of hardcoding a mode.
+    """
+    from repro.core.kway import merge_kway_ranked
+
+    backend = _dispatch("merge_window", backend)
+    k, w = runs.shape
+    total = k * w if out_len is None else out_len
+    with obs.span("repro.merge_window"):
+        if backend == "pallas":
+            merged = merge_kway_pallas(
+                runs,
+                vals,
+                lengths=lengths,
+                tile=tile,
+                interpret=_resolve_interpret(interpret),
+            )
+            if vals is None:
+                return merged[:total]
+            return merged[0][:total], merged[1][:total]
+        return merge_kway_ranked(runs, vals, lengths, out_len=total)
 
 
 @functools.partial(jax.jit, static_argnames=("backend",))

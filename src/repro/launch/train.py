@@ -48,6 +48,13 @@ def main(argv=None):
     ap.add_argument("--moe-dispatch", choices=("capacity", "dropless"),
                     default=None,
                     help="override ModelConfig.moe_dispatch (MoE archs)")
+    ap.add_argument("--external-threshold", type=int, default=0,
+                    help="bucket length-sort windows of >= N docs through "
+                         "the out-of-core external sort (repro.external); "
+                         "0 = always in-memory")
+    ap.add_argument("--external-workdir", default="",
+                    help="spill directory for --external-threshold "
+                         "(default: per-process temp dir)")
     ap.add_argument("--metrics-dir", default="",
                     help="enable repro.obs metrics; JSONL lands here "
                          "(overrides ModelConfig.metrics_dir)")
@@ -82,7 +89,11 @@ def main(argv=None):
 
     step_fn = jax.jit(build_train_step(cfg, total_steps=args.steps, warmup=10),
                       donate_argnums=(0, 1))
-    dc = DataConfig(vocab=cfg.vocab, seq_len=args.seq, batch=args.batch)
+    dc = DataConfig(
+        vocab=cfg.vocab, seq_len=args.seq, batch=args.batch,
+        external_threshold=args.external_threshold,
+        external_workdir=args.external_workdir,
+    )
     stream = batches(dc, start_step=start)
 
     profiling = False

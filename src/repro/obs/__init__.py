@@ -74,6 +74,32 @@ Metrics catalog — every record point woven through the hot paths:
 ``moe.routing_skew``         gauge: max(group_sizes) / mean — 1.0 is
                              perfectly uniform routing.
 
+== External (out-of-core) sort ==
+``external.runs_spilled``    counter: sorted runs written to host by
+                             the spill phase.
+``external.bytes_spilled``   counter: bytes those runs occupy on disk
+                             (keys + payload).
+``external.windows_merged``  counter: output windows made durable by
+                             the streaming k-way merge.
+``external.merge_passes``    gauge: fanout-capped passes a sort took
+                             (``ceil(log_fanout(n_runs))``).
+``external.device_resident_bytes`` gauge: bytes on device right now —
+                             one chunk during ``phase="chunk_sort"``,
+                             two staged ``(k, window)`` buffers + one
+                             output window during ``phase="merge"``
+                             (the O(fanout * window) bound
+                             ``tests/test_external.py`` asserts).
+``external.resident_boundary_elems`` gauge: input elements the host
+                             co-rank planner materialises per probe —
+                             exactly ``k`` (labels ``bound = k``), the
+                             partition-without-merging property.
+``external.plan_probes``     counter: boundary probes per cut search
+                             (``<= k * (ceil(log2 w) + 1)``).
+``external.copy_compute_overlap`` gauge in [0, 1]: fraction of host
+                             staging time hidden behind an in-flight
+                             device merge (double-buffering quality);
+                             labels ``k``.
+
 == Dispatch / compile ==
 ``kernels.backend_selected`` event, once per (op, backend): which
                              backend ``repro.kernels.ops`` dispatch

@@ -1,0 +1,399 @@
+"""Out-of-core external sort (repro.external): bit-exactness against the
+stable in-memory oracle, spill/merge stability, crash-resume replay,
+device-residency bounds, and the ops.merge_window dispatch surface.
+
+Everything runs on the CPU harness: "device memory" is the configured
+chunk size, and the interesting properties (exact stable order across
+spill round-trips, O(fanout * window) merge residency, idempotent window
+replay) are backend-independent.
+"""
+
+import os
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro import obs
+from repro.core.kway import co_rank_kway
+from repro.core.mergesort import sentinel_max
+from repro.data.pipeline import bucket_by_length
+from repro.external import planner
+from repro.external.api import external_argsort, external_sort
+from repro.external.runs import MANIFEST_NAME, RunSet
+from repro.kernels import ops
+
+
+def ref_order(keys: np.ndarray) -> np.ndarray:
+    return np.argsort(keys, kind="stable")
+
+
+def run_external(keys, vals, workdir, **kw):
+    got = external_sort(keys, vals, workdir=workdir, **kw)
+    if vals is None:
+        return np.asarray(got)
+    return np.asarray(got[0]), np.asarray(got[1])
+
+
+# --- bit-exactness vs np.argsort(kind="stable") -----------------------------
+
+
+def test_duplicate_heavy_multi_pass_stability(tmp_path):
+    """Few distinct keys, enough chunks for three merge passes: payload
+    order must survive every spill round-trip exactly."""
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 4, 613).astype(np.int32)
+    vals = np.arange(613, dtype=np.int32)
+    sk, sv = run_external(
+        keys, vals, str(tmp_path), chunk=67, fanout=3, window=23
+    )
+    order = ref_order(keys)
+    np.testing.assert_array_equal(sk, keys[order])
+    np.testing.assert_array_equal(sv, order)  # stability, not just keys
+
+
+def test_float_extremes(tmp_path):
+    f = np.finfo(np.float32)
+    base = np.array(
+        [np.inf, -np.inf, f.max, f.min, 0.0, -0.0, 1.5, -1.5, f.tiny],
+        np.float32,
+    )
+    rng = np.random.default_rng(1)
+    keys = base[rng.integers(0, len(base), 500)]
+    vals = np.arange(500, dtype=np.int32)
+    sk, sv = run_external(
+        keys, vals, str(tmp_path), chunk=61, fanout=4, window=16
+    )
+    order = ref_order(keys)
+    np.testing.assert_array_equal(sk, keys[order])
+    np.testing.assert_array_equal(sv, order)
+
+
+def test_int32_max_keys_not_confused_with_padding(tmp_path):
+    """Real INT32_MAX keys collide with the staging sentinel; the lengths
+    sideband (not sentinel ordering) must keep them exact."""
+    hi = np.iinfo(np.int32).max
+    rng = np.random.default_rng(2)
+    keys = rng.choice(
+        np.array([hi, hi - 1, 0, -5], np.int32), 400
+    ).astype(np.int32)
+    vals = np.arange(400, dtype=np.int32)
+    sk, sv = run_external(
+        keys, vals, str(tmp_path), chunk=53, fanout=3, window=11
+    )
+    order = ref_order(keys)
+    np.testing.assert_array_equal(sk, keys[order])
+    np.testing.assert_array_equal(sv, order)
+
+
+@pytest.mark.parametrize("direction", ["asc", "desc"])
+def test_presorted_inputs(tmp_path, direction):
+    keys = np.arange(300, dtype=np.int32)
+    if direction == "desc":
+        keys = keys[::-1].copy()
+    vals = np.arange(300, dtype=np.int32)
+    sk, sv = run_external(
+        keys, vals, str(tmp_path), chunk=47, fanout=2, window=13
+    )
+    order = ref_order(keys)
+    np.testing.assert_array_equal(sk, keys[order])
+    np.testing.assert_array_equal(sv, order)
+
+
+def test_keys_only_and_edge_sizes(tmp_path):
+    rng = np.random.default_rng(3)
+    keys = rng.integers(-50, 50, 257).astype(np.int32)
+    got = run_external(keys, None, str(tmp_path / "a"), chunk=31, fanout=2)
+    np.testing.assert_array_equal(got, np.sort(keys, kind="stable"))
+    # single-chunk passthrough (no merge pass at all)
+    got = run_external(keys, None, str(tmp_path / "b"), chunk=1024)
+    np.testing.assert_array_equal(got, np.sort(keys, kind="stable"))
+    # empty and singleton inputs
+    empty = run_external(
+        np.empty(0, np.int32), None, str(tmp_path / "c"), chunk=8
+    )
+    assert len(empty) == 0
+    one = run_external(np.array([7], np.int32), None,
+                       str(tmp_path / "d"), chunk=8)
+    np.testing.assert_array_equal(one, [7])
+
+
+def test_external_argsort_matches_np(tmp_path):
+    rng = np.random.default_rng(4)
+    keys = rng.integers(0, 9, 321).astype(np.int32)
+    order = external_argsort(
+        keys, chunk=40, fanout=3, workdir=str(tmp_path)
+    )
+    np.testing.assert_array_equal(np.asarray(order), ref_order(keys))
+
+
+# --- crash-resume -----------------------------------------------------------
+
+
+class Boom(RuntimeError):
+    pass
+
+
+def test_crash_resume_mid_merge_is_bit_exact(tmp_path):
+    """Kill the sort after 3 durable windows; the resumed run replays
+    only the remaining windows and the output is identical."""
+    rng = np.random.default_rng(5)
+    keys = rng.integers(0, 100, 700).astype(np.int32)
+    vals = np.arange(700, dtype=np.int32)
+    kw = dict(chunk=97, fanout=3, window=29, cleanup=False)
+
+    full = []
+    run_external(keys, vals, str(tmp_path / "full"), **kw,
+                 on_window=lambda *a: full.append(a))
+
+    crashed = []
+
+    def crash(p, g, w):
+        crashed.append((p, g, w))
+        if len(crashed) == 3:
+            raise Boom
+
+    wd = str(tmp_path / "crashy")
+    with pytest.raises(Boom):
+        external_sort(keys, vals, workdir=wd, on_window=crash, **kw)
+
+    resumed = []
+    sk, sv = run_external(keys, vals, wd, **kw,
+                          on_window=lambda *a: resumed.append(a))
+    order = ref_order(keys)
+    np.testing.assert_array_equal(sk, keys[order])
+    np.testing.assert_array_equal(sv, order)
+    # the 3 windows durable before the crash are not re-merged
+    assert len(resumed) == len(full) - 3
+    assert resumed == full[3:]
+
+
+def test_resume_rejects_changed_input(tmp_path):
+    keys = np.arange(100, dtype=np.int32)[::-1].copy()
+    kw = dict(chunk=16, fanout=2, cleanup=False)
+    run_external(keys, None, str(tmp_path), **kw)
+    changed = keys + 1
+    got = run_external(changed, None, str(tmp_path), **kw)
+    np.testing.assert_array_equal(got, np.sort(changed, kind="stable"))
+
+
+def test_torn_manifest_restarts_cleanly(tmp_path):
+    (tmp_path / MANIFEST_NAME).write_text('{"torn', encoding="ascii")
+    assert RunSet.load(str(tmp_path)) is None
+    keys = np.array([3, 1, 2, 0], np.int32)
+    got = run_external(keys, None, str(tmp_path), chunk=2)
+    np.testing.assert_array_equal(got, [0, 1, 2, 3])
+
+
+# --- device residency bound -------------------------------------------------
+
+
+def test_device_residency_bounded(tmp_path):
+    """On a >= 4x-chunk input, the merge phase never stages more than two
+    (k, window) double-buffered inputs plus one output window, and the
+    spill phase never exceeds one chunk — the O(fanout * window) claim."""
+    rng = np.random.default_rng(6)
+    chunk, fanout, window = 512, 3, 64
+    n = 4 * chunk + 52
+    keys = rng.integers(0, 1 << 20, n).astype(np.int32)
+    vals = np.arange(n, dtype=np.int32)
+    with obs.capture() as records:
+        sk, sv = run_external(
+            keys, vals, str(tmp_path),
+            chunk=chunk, fanout=fanout, window=window,
+        )
+    order = ref_order(keys)
+    np.testing.assert_array_equal(sk, keys[order])
+    np.testing.assert_array_equal(sv, order)
+
+    res = [r for r in records
+           if r["metric"] == "external.device_resident_bytes"]
+    by_phase = {}
+    for r in res:
+        by_phase.setdefault(r["labels"]["phase"], []).append(r["value"])
+    itm = 4 + 4  # int32 keys + int32 payload
+    assert max(by_phase["chunk_sort"]) <= chunk * itm
+    # two staged (k, window) inputs + lengths sidebands + one output window
+    bound = 2 * (fanout * window * itm + fanout * 4) + window * itm
+    assert max(by_phase["merge"]) <= bound
+    assert bound <= chunk * itm  # the sweep's windows fit inside one chunk
+
+    # the planner only ever holds the k boundary probes
+    probes = [r for r in records
+              if r["metric"] == "external.resident_boundary_elems"]
+    assert probes and all(r["value"] <= fanout for r in probes)
+    passes = [r["value"] for r in records
+              if r["metric"] == "external.merge_passes"]
+    assert passes and passes[-1] >= 2  # 9 runs at fanout 3: multi-pass
+
+
+# --- planner vs on-device co-rank -------------------------------------------
+
+
+def test_host_corank_matches_core(tmp_path):
+    rng = np.random.default_rng(7)
+    k, w = 5, 64
+    lengths = np.array([64, 0, 17, 33, 1], np.int64)
+    segs = [np.sort(rng.integers(0, 9, int(l))).astype(np.int32)
+            for l in lengths]
+    padded = np.full((k, w), sentinel_max(np.dtype(np.int32)), np.int32)
+    for q, s in enumerate(segs):
+        padded[q, : len(s)] = s
+    total = int(lengths.sum())
+    for i in [0, 1, 7, total // 3, total // 2, total - 1, total]:
+        host = planner.co_rank_kway_host(i, segs, lengths)
+        dev = np.asarray(
+            co_rank_kway(i, jnp.asarray(padded), jnp.asarray(lengths))
+        )
+        np.testing.assert_array_equal(host, dev, err_msg=f"rank {i}")
+        assert host.sum() == i
+
+
+def test_window_ranks_cover_input():
+    assert planner.window_ranks(10, 4) == [(0, 4), (4, 8), (8, 10)]
+    assert planner.window_ranks(8, 4) == [(0, 4), (4, 8)]
+    assert planner.window_ranks(0, 4) == []
+
+
+# --- ops.merge_window dispatch (satellite: REPRO_MERGE_BACKEND) -------------
+
+
+def _ragged_case(seed, k=3, w=40, dtype=np.int32, hi=None):
+    rng = np.random.default_rng(seed)
+    lengths = rng.integers(0, w + 1, k)
+    lengths[0] = w  # at least one full row
+    pad = sentinel_max(np.dtype(dtype))
+    runs = np.full((k, w), pad, dtype)
+    vals = np.zeros((k, w), np.int32)
+    nxt = 0
+    parts = []
+    for q in range(k):
+        seg = np.sort(
+            rng.integers(0, hi if hi is not None else 9, lengths[q])
+        ).astype(dtype)
+        runs[q, : lengths[q]] = seg
+        vals[q, : lengths[q]] = np.arange(nxt, nxt + lengths[q])
+        parts.append((seg, vals[q, : lengths[q]].copy()))
+        nxt += int(lengths[q])
+    ks = np.concatenate([p[0] for p in parts])
+    vs = np.concatenate([p[1] for p in parts])
+    order = np.argsort(ks, kind="stable")
+    return runs, vals, lengths.astype(np.int32), ks[order], vs[order]
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_merge_window_backends_bit_exact(backend):
+    runs, vals, lengths, want_k, want_v = _ragged_case(8)
+    total = int(lengths.sum())
+    gk, gv = ops.merge_window(
+        jnp.asarray(runs), jnp.asarray(vals), jnp.asarray(lengths),
+        out_len=total, backend=backend, tile=128,
+    )
+    np.testing.assert_array_equal(np.asarray(gk), want_k)
+    np.testing.assert_array_equal(np.asarray(gv), want_v)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_merge_window_dtype_max_keys(backend):
+    """Real dtype-max keys among sentinel padding: the lengths sideband
+    must disambiguate them on every backend."""
+    hi = np.iinfo(np.int32).max
+    runs, vals, lengths, want_k, want_v = _ragged_case(9, hi=hi)
+    runs[runs < hi - 2] = hi  # saturate most keys at the sentinel value
+    # rebuild the oracle after saturation
+    parts_k, parts_v = [], []
+    for q in range(len(lengths)):
+        seg = np.sort(runs[q, : lengths[q]])
+        runs[q, : lengths[q]] = seg
+        parts_k.append(seg)
+        parts_v.append(vals[q, : lengths[q]])
+    ks, vs = np.concatenate(parts_k), np.concatenate(parts_v)
+    order = np.argsort(ks, kind="stable")
+    total = int(lengths.sum())
+    gk, gv = ops.merge_window(
+        jnp.asarray(runs), jnp.asarray(vals), jnp.asarray(lengths),
+        out_len=total, backend=backend, tile=128,
+    )
+    np.testing.assert_array_equal(np.asarray(gk), ks[order])
+    np.testing.assert_array_equal(np.asarray(gv), vs[order])
+
+
+def test_merge_window_invalid_backend_raises():
+    runs = jnp.zeros((2, 8), jnp.int32)
+    with pytest.raises(ValueError, match="backend"):
+        ops.merge_window(runs, backend="cuda")
+
+
+def test_merge_window_honors_backend_env(monkeypatch):
+    """The external merge path reads REPRO_MERGE_BACKEND at trace time:
+    a bogus value must fail the dispatch, a valid one must merge
+    (fresh shapes per setting defeat the jit cache)."""
+    runs, vals, lengths, want_k, want_v = _ragged_case(10, w=37)
+    total = int(lengths.sum())
+    monkeypatch.setenv(ops.BACKEND_ENV_VAR, "cuda")
+    with pytest.raises(ValueError, match=ops.BACKEND_ENV_VAR):
+        ops.merge_window(
+            jnp.asarray(runs), jnp.asarray(vals), jnp.asarray(lengths),
+            out_len=total,
+        )
+    monkeypatch.setenv(ops.BACKEND_ENV_VAR, "pallas")
+    runs2, vals2, lengths2, want_k2, want_v2 = _ragged_case(10, w=39)
+    total2 = int(lengths2.sum())
+    gk, gv = ops.merge_window(
+        jnp.asarray(runs2), jnp.asarray(vals2), jnp.asarray(lengths2),
+        out_len=total2, tile=128,
+    )
+    np.testing.assert_array_equal(np.asarray(gk), want_k2)
+    np.testing.assert_array_equal(np.asarray(gv), want_v2)
+
+
+def test_external_sort_through_pallas_backend(tmp_path):
+    """End-to-end spill+merge with every window on the pallas kernel."""
+    rng = np.random.default_rng(11)
+    keys = rng.integers(0, 50, 300).astype(np.int32)
+    vals = np.arange(300, dtype=np.int32)
+    sk, sv = run_external(
+        keys, vals, str(tmp_path),
+        chunk=64, fanout=2, window=32, backend="pallas",
+    )
+    order = ref_order(keys)
+    np.testing.assert_array_equal(sk, keys[order])
+    np.testing.assert_array_equal(sv, order)
+
+
+# --- pipeline integration ---------------------------------------------------
+
+
+def test_bucket_by_length_external_matches_inmem(tmp_path):
+    rng = np.random.default_rng(12)
+    lengths = rng.integers(1, 100, 257)
+    base = bucket_by_length(lengths)
+    got = bucket_by_length(
+        lengths, external_threshold=64, external_workdir=str(tmp_path)
+    )
+    np.testing.assert_array_equal(base, got)
+    # below the threshold the in-memory path runs (workdir untouched)
+    small = bucket_by_length(
+        lengths[:32], external_threshold=64,
+        external_workdir=str(tmp_path / "unused"),
+    )
+    np.testing.assert_array_equal(small, bucket_by_length(lengths[:32]))
+    assert not os.path.exists(str(tmp_path / "unused"))
+
+
+# --- large sweep ------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_large_multi_pass_sweep(tmp_path):
+    rng = np.random.default_rng(13)
+    n = 200_000
+    keys = rng.integers(np.iinfo(np.int32).min, np.iinfo(np.int32).max, n,
+                        dtype=np.int64).astype(np.int32)
+    vals = np.arange(n, dtype=np.int32)
+    sk, sv = run_external(
+        keys, vals, str(tmp_path), chunk=8192, fanout=4
+    )
+    order = ref_order(keys)
+    np.testing.assert_array_equal(sk, keys[order])
+    np.testing.assert_array_equal(sv, order)

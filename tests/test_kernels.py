@@ -9,7 +9,7 @@ import pytest
 import jax.numpy as jnp
 from _prop import given, settings, st
 
-from repro.kernels.merge import merge_pallas
+from repro.kernels.merge import merge_kway_pallas, merge_pallas
 from repro.kernels.ref import merge_np, merge_ref
 
 
@@ -96,3 +96,56 @@ def test_merge_kernel_adversarial_skew():
     b = jnp.arange(3000, 5000, dtype=jnp.int32)
     got = np.asarray(merge_pallas(a, b, tile=256))
     np.testing.assert_array_equal(got, np.arange(5000, dtype=np.int32))
+
+
+# --- k-way tile kernel: payload + ragged-lengths extension ------------------
+
+
+@pytest.mark.parametrize("k,w,tile", [(2, 256, 128), (4, 512, 128),
+                                      (8, 256, 256)])
+def test_kway_kernel_payload_rides_stable_permutation(k, w, tile):
+    """(key, payload) pairs through the tile kernel: payload must follow
+    the exact stable permutation (run index breaks ties), checked on
+    duplicate-heavy keys where any instability shuffles payloads."""
+    rng = np.random.default_rng(k * 1000 + w + tile)
+    runs = np.sort(rng.integers(0, 7, (k, w)).astype(np.int32), axis=1)
+    vals = np.arange(k * w, dtype=np.int32).reshape(k, w)
+    gk, gv = merge_kway_pallas(jnp.asarray(runs), jnp.asarray(vals),
+                               tile=tile)
+    order = np.argsort(runs.reshape(-1), kind="stable")
+    np.testing.assert_array_equal(np.asarray(gk), runs.reshape(-1)[order])
+    np.testing.assert_array_equal(np.asarray(gv), vals.reshape(-1)[order])
+
+
+def test_kway_kernel_ragged_lengths_with_dtype_max():
+    """Ragged runs whose padding collides with real INT32_MAX keys: the
+    lengths sideband (co-rank clamping), not sentinel ordering, must keep
+    the merged prefix exact."""
+    hi = np.iinfo(np.int32).max
+    rng = np.random.default_rng(99)
+    k, w = 4, 256
+    lengths = np.array([256, 0, 100, 31], np.int32)
+    runs = np.full((k, w), hi, np.int32)
+    vals = np.zeros((k, w), np.int32)
+    parts_k, parts_v = [], []
+    nxt = 0
+    for q in range(k):
+        seg = np.sort(
+            rng.choice(np.array([hi, hi - 1, 3, -9], np.int32), lengths[q])
+        )
+        runs[q, : lengths[q]] = seg
+        vals[q, : lengths[q]] = np.arange(nxt, nxt + lengths[q])
+        parts_k.append(seg)
+        parts_v.append(vals[q, : lengths[q]].copy())
+        nxt += int(lengths[q])
+    ks = np.concatenate(parts_k)
+    order = np.argsort(ks, kind="stable")
+    total = int(lengths.sum())
+    gk, gv = merge_kway_pallas(
+        jnp.asarray(runs), jnp.asarray(vals),
+        lengths=jnp.asarray(lengths), tile=128,
+    )
+    np.testing.assert_array_equal(np.asarray(gk)[:total], ks[order])
+    np.testing.assert_array_equal(
+        np.asarray(gv)[:total], np.concatenate(parts_v)[order]
+    )
