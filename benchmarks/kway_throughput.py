@@ -11,11 +11,17 @@ output materialisation is the expensive part on CPU/TPU XLA, so larger
 fan-outs win once n is big enough to amortise the search work.
 
 Derived column: million elements sorted (or merged) per second.
+
+``--guard [baseline.json]`` re-times only the ``kway_merge/*`` records
+and exits 1 if any median regresses more than 10% against the checked-in
+``BENCH_kway.json`` baseline — the no-regression lane of
+``scripts/verify.sh --engine``.
 """
 
 from __future__ import annotations
 
 import json
+import sys
 
 import numpy as np
 import jax
@@ -110,5 +116,73 @@ def main(json_path: str | None = None):
     return records
 
 
+def _merge_timers():
+    """``{record name: () -> median µs}`` for just the ``kway_merge/*``
+    records (same rng seed and shapes as :func:`main`, skipping the
+    full-sort sweep)."""
+    from repro.kernels.merge import merge_kway_pallas
+
+    rng = np.random.default_rng(7)
+    timers: dict = {}
+    for k, w in ((4, 1 << 16), (8, 1 << 15), (16, 1 << 14)):
+        runs = jnp.asarray(
+            np.sort(rng.integers(0, 1 << 30, (k, w)), axis=1), jnp.int32
+        )
+        timers[f"kway_merge/kway/{k}x{w}"] = (
+            lambda r=runs, **kw: time_fn(
+                jax.jit(merge_kway_ranked), r, **kw
+            )
+        )
+    runs = jnp.asarray(
+        np.sort(rng.integers(0, 1 << 30, (4, 1 << 10)), axis=1), jnp.int32
+    )
+    timers[f"kway_merge/pallas_interpret/4x{1 << 10}"] = (
+        lambda r=runs, **kw: time_fn(
+            lambda x: merge_kway_pallas(x, tile=512), r, **kw
+        )
+    )
+    return timers
+
+
+def guard(baseline_path: str = "BENCH_kway.json", tol: float = 0.10) -> int:
+    """Fail (return 1) if any ``kway_merge`` record regresses > ``tol``
+    against the checked-in baseline.  The current measurement is the
+    *minimum* over iterations (neighbour load only ever inflates a
+    timing, so min is the load-robust statistic; a genuine code
+    regression inflates every iteration including the min), and a
+    record over threshold is re-timed once with 4x the iterations
+    before it counts as a regression.  New records (absent from the
+    baseline) pass trivially; speedups always pass."""
+    with open(baseline_path) as f:
+        baseline = {
+            r["name"]: r["us_per_call"] for r in json.load(f)["records"]
+        }
+    failed = 0
+    for name, timer in _merge_timers().items():
+        base = baseline.get(name)
+        if base is None:
+            row(name, timer(), "no baseline — skipped")
+            continue
+        stats = timer()
+        if stats.min_us / base > 1.0 + tol:
+            stats = timer(iters=20)
+        us = stats.min_us
+        ratio = us / base
+        ok = ratio <= 1.0 + tol
+        row(name, us, f"baseline={base:.0f}us;x{ratio:.2f};"
+            + ("ok" if ok else f"REGRESSION>{tol:.0%}"))
+        failed += not ok
+    if failed:
+        print(f"# bench guard: {failed} record(s) regressed "
+              f"beyond {tol:.0%}", flush=True)
+    else:
+        print("# bench guard: all kway_merge timings within "
+              f"{tol:.0%} of baseline", flush=True)
+    return 1 if failed else 0
+
+
 if __name__ == "__main__":
+    if "--guard" in sys.argv[1:]:
+        rest = [a for a in sys.argv[1:] if a != "--guard"]
+        sys.exit(guard(rest[0] if rest else "BENCH_kway.json"))
     main("BENCH_kway.json")

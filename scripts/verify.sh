@@ -15,6 +15,13 @@
 #                                    # small chunks/windows forcing multi-pass
 #                                    # merges, crash-resume + residency bounds;
 #                                    # includes the @slow large sweep
+#   scripts/verify.sh --engine       # one-engine equivalence sweep (device,
+#                                    # 8-device collective, host planner and
+#                                    # Pallas-interpret cuts bit-identical on
+#                                    # the shared oracle cases) + the
+#                                    # kway_merge no-regression bench guard
+#                                    # (fail if a median regresses >10% vs
+#                                    # BENCH_kway.json)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -37,6 +44,13 @@ case "${1:-}" in
         # The 8-device acceptance run is a child process that forces its own
         # device count; the fast-lane HLO-identity tests run here too.
         exec python -m pytest -q tests/test_obs.py
+        ;;
+    --engine)
+        # The 8-device lane is a child process that forces its own device
+        # count; the bench guard re-times the kway_merge records against
+        # the checked-in baseline.
+        python -m pytest -q tests/test_engine.py
+        exec python -m benchmarks.kway_throughput --guard
         ;;
     --external)
         # Spill files land in pytest tmpdirs; the suite's small chunk /

@@ -23,6 +23,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import SIDE_STRICT, SIDE_TIES
+
 __all__ = [
     "equidistant_partition",
     "merge_equidistant",
@@ -46,14 +48,15 @@ def equidistant_partition(a: jax.Array, b: jax.Array, p: int):
     ja = jnp.asarray([min(m, -(-m // p) * r) for r in range(p + 1)], jnp.int32)
     kb = jnp.asarray([min(n, -(-n // p) * r) for r in range(p + 1)], jnp.int32)
     # Cross-ranks via binary search (ties: consistent with stable merge —
-    # A splitters rank 'left' into B, B splitters rank 'right' into A).
-    ka = jnp.searchsorted(b, a[jnp.clip(ja, 0, m - 1)], side="left").astype(
-        jnp.int32
-    )
+    # the engine's sides: A splitters rank strictly into B, B splitters
+    # rank past ties into A).
+    ka = jnp.searchsorted(
+        b, a[jnp.clip(ja, 0, m - 1)], side=SIDE_STRICT
+    ).astype(jnp.int32)
     ka = jnp.where(ja >= m, n, ka).at[0].set(0)
-    jb = jnp.searchsorted(a, b[jnp.clip(kb, 0, n - 1)], side="right").astype(
-        jnp.int32
-    )
+    jb = jnp.searchsorted(
+        a, b[jnp.clip(kb, 0, n - 1)], side=SIDE_TIES
+    ).astype(jnp.int32)
     jb = jnp.where(kb >= n, m, jb).at[0].set(0)
     # Union of cut points, ordered by output offset (stable on ties).
     j_cuts = jnp.concatenate([ja, jb])

@@ -12,10 +12,13 @@ iterations (Proposition 1) and never materialises the merge.  Stability is
 encoded purely in the ``<=`` / ``<`` asymmetry of the two conditions: ties
 always resolve to taking the A element first.
 
-The implementation is a literal transcription of Algorithm 1 into
-``jax.lax.while_loop`` so it can be jitted, vmapped (many ranks at once) and
-used under ``shard_map``.  All index arithmetic is int32; array bounds ``m``
-and ``n`` are static (taken from the array shapes).
+This module is the *local-array instantiation* of the one co-rank engine
+(``repro.core.engine``): the search body, the Lemma-1 predicates and the
+Proposition-1 accounting all live there — here we only supply reads into
+two on-device arrays and keep the public API (``co_rank`` /
+``co_rank_batch`` / ``CoRankResult`` / ``prop1_bound``).  The dynamic
+``lax.while_loop`` runner counts iterations so the Prop-1 invariant stays
+observable at runtime; the engine records them (``corank.iterations``).
 """
 
 from __future__ import annotations
@@ -24,24 +27,11 @@ from functools import partial
 from typing import NamedTuple
 
 import jax
-import jax.numpy as jnp
-from jax import lax
 
-from repro import obs
+from repro.core import engine
+from repro.core.engine import prop1_bound  # noqa: F401  (public re-export)
 
 __all__ = ["co_rank", "co_rank_batch", "CoRankResult", "prop1_bound"]
-
-
-def prop1_bound(m: int, n: int) -> int:
-    """Proposition 1's iteration bound ``ceil(log2 min(m, n)) + 1``.
-
-    The runtime invariant counter (``corank.iterations``) and the
-    property tests both check recorded iteration counts against this.
-    """
-    mn = min(m, n)
-    if mn <= 0:
-        return 0
-    return (mn - 1).bit_length() + 1
 
 
 class CoRankResult(NamedTuple):
@@ -54,11 +44,6 @@ class CoRankResult(NamedTuple):
     j: jax.Array
     k: jax.Array
     iterations: jax.Array
-
-
-def _safe_get(arr: jax.Array, idx: jax.Array) -> jax.Array:
-    """arr[idx] with idx clamped into range (callers guard validity)."""
-    return arr[jnp.clip(idx, 0, arr.shape[0] - 1)]
 
 
 @partial(jax.jit, static_argnames=())
@@ -75,52 +60,14 @@ def co_rank(i: jax.Array, a: jax.Array, b: jax.Array) -> CoRankResult:
     """
     m = a.shape[0]
     n = b.shape[0]
-    i = jnp.asarray(i, jnp.int32)
-
-    # Line 1-3: extreme assumption — as many of the i elements as possible
-    # come from A.  k_low/iters are derived from i (``i * 0``) so their
-    # shard_map varying-axes type matches the loop body's outputs when the
-    # search runs per-device inside shard_map.
-    j = jnp.minimum(i, m)
-    k = i - j
-    j_low = jnp.maximum(i * 0, i - n)
-    k_low = i * 0
-
-    def first_violated(j, k):
-        # j > 0 and k < n and A[j-1] > B[k]
-        guard = (j > 0) & (k < n)
-        return guard & (_safe_get(a, j - 1) > _safe_get(b, k))
-
-    def second_violated(j, k):
-        # k > 0 and j < m and B[k-1] >= A[j]
-        guard = (k > 0) & (j < m)
-        return guard & (_safe_get(b, k - 1) >= _safe_get(a, j))
-
-    def cond(state):
-        j, k, j_low, k_low, iters = state
-        return first_violated(j, k) | second_violated(j, k)
-
-    def body(state):
-        j, k, j_low, k_low, iters = state
-        fv = first_violated(j, k)
-        # First Lemma condition violated: decrease j (lines 6-10).
-        delta_j = (j - j_low + 1) // 2  # ceil((j - j_low)/2)
-        # Second Lemma condition violated: decrease k (lines 11-15).
-        delta_k = (k - k_low + 1) // 2  # ceil((k - k_low)/2)
-
-        new_k_low = jnp.where(fv, k, k_low)
-        new_j_low = jnp.where(fv, j_low, j)
-        new_j = jnp.where(fv, j - delta_j, j + delta_k)
-        new_k = jnp.where(fv, k + delta_j, k - delta_k)
-        return new_j, new_k, new_j_low, new_k_low, iters + 1
-
-    j, k, _, _, iters = lax.while_loop(
-        cond, body, (j, k, j_low, k_low, i * 0)
+    j, k, iters = engine.co_rank_pairwise(
+        i,
+        m,
+        n,
+        read_a=lambda idx: a[idx],
+        read_b=lambda idx: b[idx],
+        metric="corank.iterations",
     )
-    if obs.enabled():
-        obs.histogram(
-            "corank.iterations", iters, bound=prop1_bound(m, n), m=m, n=n
-        )
     return CoRankResult(j, k, iters)
 
 

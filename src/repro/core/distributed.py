@@ -1,25 +1,12 @@
-"""Deprecated location — the distributed layer grew into a subsystem.
+"""Deprecated location — import from ``repro.distributed`` instead.
 
-This module used to hold the whole multi-device story in one file; it is
-now a thin re-export of ``repro.distributed`` (splitters / exchange /
-api), kept so existing imports keep working.  The three strategies and
-their memory-traffic trade-offs, in brief (full discussion in
-``repro.distributed.api``):
-
-* ``allgather`` — replicate the runs (one ``all_gather``, ``O(N)``
-  memory and receive bytes per device), co-rank and merge the local
-  block.  Simplest; caps scaling at single-device memory.
-* ``corank`` — distribute the co-rank *search* (``O(log)`` rounds of
-  ``O(p)``-scalar collectives), still gather the data windows.  Same
-  ``O(N)`` data traffic; proves the search needs no replication.
-* ``exchange`` — distributed k-way splitters (``O(log(N/p))`` rounds,
-  ``O(p^2)`` scalars each) + balanced ``all_to_all`` (each device
-  receives exactly its ``N/p``-element block) + local ragged k-way
-  merge.  ``O(N/p)`` real payload per device; no full-``N``
-  ``all_gather`` of values anywhere.
-
-New code should import from ``repro.distributed`` directly.
+This module used to hold the whole multi-device story in one file; the
+distributed layer grew into a subsystem (``repro.distributed.splitters``
+/ ``exchange`` / ``api``).  Nothing lives here anymore: this is a pure
+re-export shim kept so old imports keep working, and it warns on import.
 """
+
+import warnings
 
 from repro.distributed.api import (  # noqa: F401
     distributed_merge,
@@ -32,6 +19,13 @@ from repro.distributed.api import (  # noqa: F401
 from repro.distributed.splitters import (  # noqa: F401
     distributed_co_rank,
     distributed_co_rank_kway,
+)
+
+warnings.warn(
+    "repro.core.distributed is deprecated; import from repro.distributed "
+    "(api / splitters) instead.",
+    DeprecationWarning,
+    stacklevel=2,
 )
 
 __all__ = [

@@ -51,6 +51,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro import obs
+from repro.core import engine
+from repro.core.engine import SIDE_STRICT, SIDE_TIES
 from repro.core.merge import partition_bounds
 
 __all__ = [
@@ -62,17 +64,56 @@ __all__ = [
 ]
 
 
-def _pair_counts_matrix(k: int):
-    """(rp, r) index grids for choosing the Lemma-1 side per run pair."""
-    rp = jnp.arange(k, dtype=jnp.int32)[:, None]
-    r = jnp.arange(k, dtype=jnp.int32)[None, :]
-    return rp, r
+class _DenseProbe:
+    """Engine probe over an on-device ``(k, w)`` run array.
+
+    ``values`` is one clamped gather; ``counts`` is a vmapped
+    ``searchsorted`` per Lemma-1 side; the loop lowers as a static
+    ``lax.fori_loop`` (jit/vmap-safe).  See ``repro.core.engine`` for
+    the protocol.
+    """
+
+    xp = jnp
+    run_loop = staticmethod(engine.run_fori)
+
+    def __init__(self, runs: jax.Array, lengths: jax.Array):
+        k, w = runs.shape
+        self.runs = runs
+        self.width = w
+        self.lengths = lengths  # (k,)
+        self.owner_ids = jnp.arange(k, dtype=jnp.int32)[:, None]
+        self.query_ids = jnp.arange(k, dtype=jnp.int32)[None, :]
+        self.owner_lengths = lengths[:, None]
+        self._rows = jnp.arange(k, dtype=jnp.int32)
+
+    def init_bounds(self, i):
+        k = self.runs.shape[0]
+        return jnp.zeros((k,), jnp.int32), self.lengths
+
+    def values(self, t):
+        return self.runs[self._rows, jnp.clip(t, 0, self.width - 1)]
+
+    def counts(self, x):
+        le = jax.vmap(lambda row: jnp.searchsorted(row, x, side=SIDE_TIES))(
+            self.runs
+        ).astype(jnp.int32)
+        lt = jax.vmap(lambda row: jnp.searchsorted(row, x, side=SIDE_STRICT))(
+            self.runs
+        ).astype(jnp.int32)
+        return le, lt
+
+    def reduce(self, cnt):
+        return cnt.sum(axis=0)
 
 
 def co_rank_kway(
     i: jax.Array, runs: jax.Array, lengths: jax.Array | None = None
 ) -> jax.Array:
     """Cut vector ``j`` (shape ``(k,)``) of output rank ``i`` into ``runs``.
+
+    The dense-array instantiation of ``engine.co_rank_search`` — the
+    lock-step k-way Lemma-1 bisection, ``kway_round_bound(w)`` rounds of
+    ``k`` vectorised ``searchsorted`` probes.
 
     Args:
       i: output rank, ``0 <= i <= sum(lengths)`` (scalar, may be traced).
@@ -91,39 +132,12 @@ def co_rank_kway(
         lengths = jnp.full((k,), w, jnp.int32)
     else:
         lengths = jnp.asarray(lengths, jnp.int32)
-    rp, r = _pair_counts_matrix(k)
-    rows = jnp.arange(k, dtype=jnp.int32)
-
-    def merged_rank(t: jax.Array) -> jax.Array:
-        """rank(r, t_r) for candidate indices ``t`` (k,), vectorised."""
-        x = runs[rows, jnp.clip(t, 0, w - 1)]  # (k,) candidate values
-        ssl = jax.vmap(lambda row: jnp.searchsorted(row, x, side="left"))(
-            runs
-        ).astype(jnp.int32)
-        ssr = jax.vmap(lambda row: jnp.searchsorted(row, x, side="right"))(
-            runs
-        ).astype(jnp.int32)
-        # [rp, r]: runs before r count ties (<=), runs after strictly (<).
-        cnt = jnp.where(rp < r, ssr, ssl)
-        cnt = jnp.where(rp == r, 0, cnt)
-        cnt = jnp.minimum(cnt, lengths[:, None])  # never count padding
-        return t + cnt.sum(axis=0)
-
-    # Lock-step binary search per run: j_r = |{t : rank(r, t) < i}| over
-    # the monotone predicate; fixed round count keeps the loop static.
-    rounds = max(1, w).bit_length() + 1
-
-    def body(_, lo_hi):
-        lo, hi = lo_hi
-        mid = (lo + hi) // 2
-        pred = (mid < lengths) & (merged_rank(mid) < i)
-        return jnp.where(pred, mid + 1, lo), jnp.where(pred, hi, mid)
-
-    lo = jnp.zeros((k,), jnp.int32)
-    lo, _ = lax.fori_loop(0, rounds, body, (lo, lengths))
-    if obs.enabled():
-        obs.gauge("kway.corank_rounds", rounds, bound=rounds, k=k, w=w)
-    return lo
+    return engine.co_rank_search(
+        i,
+        _DenseProbe(runs, lengths),
+        metric="kway.corank_rounds",
+        labels={"k": k, "w": w},
+    )
 
 
 def co_rank_kway_batch(
@@ -149,17 +163,17 @@ def kway_positions(
     k, w = runs.shape
     if lengths is None:
         # Hot path (uniform runs): element (r, t) is searched into each
-        # sibling rp once — runs after rp count ties into rp
-        # (<=, side='right'), runs before it count strictly
-        # (<, side='left'): Lemma 1 applied pairwise.
+        # sibling rp once — runs after rp count ties into rp (SIDE_TIES),
+        # runs before it count strictly (SIDE_STRICT): Lemma 1 applied
+        # pairwise, sides from the engine's one tie-break definition.
         cnt = jnp.zeros((k, w), jnp.int32)
         for rp in range(k):
             row = runs[rp]
             if rp + 1 < k:
-                cr = jnp.searchsorted(row, runs[rp + 1 :], side="right")
+                cr = jnp.searchsorted(row, runs[rp + 1 :], side=SIDE_TIES)
                 cnt = cnt.at[rp + 1 :].add(cr.astype(jnp.int32))
             if rp > 0:
-                cl = jnp.searchsorted(row, runs[:rp], side="left")
+                cl = jnp.searchsorted(row, runs[:rp], side=SIDE_STRICT)
                 cnt = cnt.at[:rp].add(cl.astype(jnp.int32))
     else:
         # Ragged runs: same incremental loop, with each source row's
@@ -175,12 +189,12 @@ def kway_positions(
             row = runs[rp]
             cap = lengths[rp]
             if rp + 1 < k:
-                cr = jnp.searchsorted(row, runs[rp + 1 :], side="right")
+                cr = jnp.searchsorted(row, runs[rp + 1 :], side=SIDE_TIES)
                 cnt = cnt.at[rp + 1 :].add(
                     jnp.minimum(cr.astype(jnp.int32), cap)
                 )
             if rp > 0:
-                cl = jnp.searchsorted(row, runs[:rp], side="left")
+                cl = jnp.searchsorted(row, runs[:rp], side=SIDE_STRICT)
                 cnt = cnt.at[:rp].add(
                     jnp.minimum(cl.astype(jnp.int32), cap)
                 )
@@ -237,12 +251,13 @@ def _kfinger_segment(
         cur, out = state
         vals = runs[rows, jnp.clip(cur, 0, w - 1)]
         avail = cur < hi
-        # Fold min with availability flags: strict '<' keeps the earliest
-        # run on ties — the run-index stability rule — and avoids any
-        # sentinel that could collide with real dtype-max values.
+        # Fold min with availability flags: the engine's k-finger rule
+        # (strict '<') keeps the earliest run on ties — the run-index
+        # stability rule — and avoids any sentinel that could collide
+        # with real dtype-max values.
         best_val, best_q, best_ok = vals[0], jnp.int32(0), avail[0]
         for q in range(1, k):
-            better = avail[q] & (~best_ok | (vals[q] < best_val))
+            better = engine.kfinger_better(vals[q], best_val, avail[q], best_ok)
             best_val = jnp.where(better, vals[q], best_val)
             best_q = jnp.where(better, jnp.int32(q), best_q)
             best_ok = best_ok | avail[q]

@@ -26,7 +26,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import engine
 from repro.core.corank import co_rank_batch
+from repro.core.engine import SIDE_STRICT, SIDE_TIES
 
 __all__ = [
     "merge_by_ranking",
@@ -55,11 +57,13 @@ def merge_by_ranking(a: jax.Array, b: jax.Array) -> jax.Array:
     co-rank conditions of Lemma 1 applied element-wise.
     """
     m, n = a.shape[0], b.shape[0]
+    # Sides from the engine's tie-break: B (the later run) counts
+    # strictly against A's elements, A counts ties against B's.
     pos_a = jnp.arange(m, dtype=jnp.int32) + jnp.searchsorted(
-        b, a, side="left"
+        b, a, side=SIDE_STRICT
     ).astype(jnp.int32)
     pos_b = jnp.arange(n, dtype=jnp.int32) + jnp.searchsorted(
-        a, b, side="right"
+        a, b, side=SIDE_TIES
     ).astype(jnp.int32)
     out = jnp.zeros((m + n,), dtype=jnp.result_type(a, b))
     out = out.at[pos_a].set(a, mode="drop", unique_indices=True)
@@ -93,8 +97,8 @@ def merge_segment_twofinger(
         b_val = b[jnp.clip(kb, 0, n - 1)]
         a_avail = ja < j_hi
         b_avail = kb < k_hi
-        # Stability: on ties take from A (<=).
-        take_a = a_avail & (~b_avail | (a_val <= b_val))
+        # Stability: the engine's two-finger rule (on ties take from A).
+        take_a = engine.take_first(a_val, b_val, a_avail, b_avail)
         val = jnp.where(take_a, a_val, b_val).astype(dtype)
         valid = a_avail | b_avail
         out = lax.dynamic_update_index_in_dim(

@@ -52,6 +52,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro import obs
+from repro.core import engine
 from repro.core.compat import axis_size as _axis_size
 from repro.core.kway import merge_kway_ranked
 from repro.distributed.exchange import balanced_exchange, window, window_rows
@@ -179,9 +180,7 @@ def dropless_dispatch(
     # small capacity truncated some segment.
     seg_vals = lob + jnp.arange(e_per + 1, dtype=jnp.int32)
     rl = jax.vmap(
-        lambda row, ln: jnp.minimum(
-            jnp.searchsorted(row, seg_vals, side="left").astype(jnp.int32), ln
-        )
+        lambda row, ln: engine.value_cut_counts(row, seg_vals, ln)
     )(recv_e, recv_lengths)  # (p, e_per + 1)
     group_sizes = (rl[:, 1:] - rl[:, :-1]).sum(axis=0)  # (e_per,)
 

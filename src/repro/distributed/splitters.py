@@ -6,20 +6,24 @@ remote probe is a value lookup or a ``searchsorted`` count that the run's
 owner can answer locally, and the ``p`` devices' searches advance in
 lock-step rounds of ``O(p^2)``-scalar collectives.
 
-Two searches live here:
+All three searches here are instantiations of the one co-rank engine
+(``repro.core.engine``) with *remote* reads — the search bodies, the
+Lemma-1 tie-break and the round bounds are the engine's; this module
+only supplies the collective read/count/reduce plumbing:
 
-* ``distributed_co_rank`` — the pairwise Algorithm 1 (two sorted arrays
-  sharded over the mesh).  Each binary-search step performs its four
-  remote reads by publishing the wanted global indices (``all_gather`` of
-  ``p`` int32) and answering with a masked ``psum`` — the owner
-  contributes the value, everyone else zero.  ``O(log min(m, n))``
-  rounds.
+* ``distributed_co_rank`` — the pairwise Algorithm 1
+  (``engine.co_rank_pairwise``) with each of its four boundary reads
+  answered by :func:`_remote_read` (publish indices via ``all_gather``,
+  owners answer via masked ``psum``).  Run to the engine's static
+  ``pairwise_lockstep_rounds`` schedule so all ``p`` searches share
+  collective rounds.
 
-* ``distributed_co_rank_kway`` — the multi-way generalisation: ``p``
-  sorted runs, one per device, and a *batch* of ``B`` output ranks per
-  device (``B = 2`` for a block's two bounds).  All ``p * B`` cut-vector
-  searches resolve together in ``O(log(N/p))`` lock-step rounds.  Per
-  round each device publishes its ``(B, p)`` candidate indices (one
+* ``distributed_co_rank_kway`` — the k-way bisection
+  (``engine.co_rank_search``) through :class:`_CollectiveProbe`: ``p``
+  sorted runs, one per device, a *batch* of ``B`` output ranks per
+  device, all ``p * B`` cut-vector searches resolving together in the
+  engine's ``kway_round_bound(w)`` lock-step rounds.  Per round each
+  device publishes its ``(B, p)`` candidate indices (one
   ``all_gather``), answers value lookups into its own run (one masked
   ``psum``), and contributes its Lemma-1 tie-aware ``searchsorted``
   counts for every candidate value (one more ``psum``) — ``O(p^2 B)``
@@ -27,8 +31,9 @@ Two searches live here:
 
 * ``distributed_segment_cuts`` — the *value-keyed* degenerate case that
   MoE expert dispatch needs: when the boundary **values** are known a
-  priori (segment ids ``0..E-1``), Lemma 1's binary search collapses to
-  one local ``searchsorted`` per boundary, so all ``E + 1`` global
+  priori (segment ids ``0..E-1``), the bisection collapses to the
+  engine's ``value_cut_counts`` (one local ``searchsorted`` per
+  boundary, the same strict Lemma-1 side), so all ``E + 1`` global
   segment boundaries resolve in a **single** collective round of
   ``O(p * E)`` int32 scalars.  The result agrees column-for-column with
   ``distributed_co_rank_kway`` evaluated at the boundary *ranks*
@@ -36,9 +41,10 @@ Two searches live here:
   ``< e`` precedes every element with key ``>= e`` in the stable merge,
   so the rank-``b_e`` cut vector is exactly the per-run ``< e`` counts.
 
-Both return the same cuts as their single-device counterparts
+All return the same cuts as their single-device counterparts
 (``repro.core.corank.co_rank`` / ``repro.core.kway.co_rank_kway``),
-verified element-for-element in ``tests/_exchange_check.py``.
+verified element-for-element in ``tests/_exchange_check.py`` and the
+cross-layer sweep in ``tests/test_engine.py``.
 """
 
 from __future__ import annotations
@@ -48,8 +54,9 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro import obs
+from repro.core import engine
 from repro.core.compat import axis_size as _axis_size
-from repro.core.corank import prop1_bound
+from repro.core.engine import SIDE_STRICT, SIDE_TIES
 
 __all__ = [
     "distributed_co_rank",
@@ -67,8 +74,8 @@ def _remote_read(shard: jax.Array, gidx: jax.Array, axis_name: str):
     """Every device reads global element ``gidx`` (its own request) from the
     sharded array: publish indices, owners answer via masked psum.
 
-    Out-of-range ``gidx`` (sentinel reads A[-1], A[m]) return +/-inf codes
-    handled by the caller; here we clamp and also return validity.
+    The engine clamps ``gidx`` into the global range before calling;
+    owner/local clamping here guards the uniform-shard arithmetic.
     """
     p = _axis_size(axis_name)
     r = lax.axis_index(axis_name)
@@ -89,62 +96,96 @@ def distributed_co_rank(
     """Algorithm 1 with remote reads over collectives (per-device rank i).
 
     Each device searches for the co-ranks of its own ``i``; the p searches
-    run in lock-step rounds (a fixed ``ceil(log2 min(m,n)) + 2`` count so
-    the loop is static).  Returns ``(j, k)`` global co-ranks.
+    run in lock-step rounds (the engine's static
+    ``pairwise_lockstep_rounds`` schedule, so converged searches no-op
+    while the collectives stay aligned).  Returns ``(j, k)`` global
+    co-ranks.
     """
     p = _axis_size(axis_name)
     m = a_shard.shape[0] * p
     n = b_shard.shape[0] * p
-    i = jnp.asarray(i, jnp.int32)
-
-    j = jnp.minimum(i, m)
-    k = i - j
-    j_low = jnp.maximum(jnp.int32(0), i - n)
-    # k_low is derived from i so its shard_map varying-axes type matches
-    # the loop body's output (i is per-device inside shard_map).
-    k_low = i * 0
-
-    rounds = max(1, min(m, n).bit_length() + 2)
-
-    def body(_, state):
-        j, k, j_low, k_low = state
-        a_jm1 = _remote_read(a_shard, jnp.maximum(j - 1, 0), axis_name)
-        b_k = _remote_read(b_shard, jnp.minimum(k, n - 1), axis_name)
-        b_km1 = _remote_read(b_shard, jnp.maximum(k - 1, 0), axis_name)
-        a_j = _remote_read(a_shard, jnp.minimum(j, m - 1), axis_name)
-
-        fv = (j > 0) & (k < n) & (a_jm1 > b_k)
-        sv = (k > 0) & (j < m) & (b_km1 >= a_j)
-
-        delta_j = (j - j_low + 1) // 2
-        delta_k = (k - k_low + 1) // 2
-        new_k_low = jnp.where(fv, k, k_low)
-        new_j_low = jnp.where(fv | ~sv, j_low, j)
-        new_j = jnp.where(fv, j - delta_j, jnp.where(sv, j + delta_k, j))
-        new_k = jnp.where(fv, k + delta_j, jnp.where(sv, k - delta_k, k))
-        return new_j, new_k, new_j_low, new_k_low
-
-    j, k, _, _ = lax.fori_loop(0, rounds, body, (j, k, j_low, k_low))
-    if obs.enabled():
-        # The lock-step distributed search runs a fixed padded schedule of
-        # ``ceil(log2(min(m,n)+1)) + 2`` rounds (one convergence round +
-        # one safety round over the per-device dynamic searches); the
-        # truly dynamic Prop-1 counter is ``corank.iterations``.
-        obs.gauge(
-            "splitters.pairwise_rounds",
-            rounds,
-            bound=rounds,
-            prop1_bound=prop1_bound(m, n),
-            m=m,
-            n=n,
-            device=lax.axis_index(axis_name),
-        )
+    j, k, _ = engine.co_rank_pairwise(
+        i,
+        m,
+        n,
+        read_a=lambda idx: _remote_read(a_shard, idx, axis_name),
+        read_b=lambda idx: _remote_read(b_shard, idx, axis_name),
+        rounds=engine.pairwise_lockstep_rounds(m, n),
+        metric="splitters.pairwise_rounds",
+        labels={"device": lax.axis_index(axis_name)},
+    )
     return j, k
 
 
 # ---------------------------------------------------------------------------
 # k-way (one sorted run per device, batched ranks)
 # ---------------------------------------------------------------------------
+
+
+class _CollectiveProbe:
+    """Engine probe over one sorted run per mesh device.
+
+    ``values`` publishes every device's ``(B, p)`` candidate indices
+    (``all_gather``) and resolves them with a masked ``psum`` (owners
+    answer); ``counts`` is this device's local ``searchsorted`` of every
+    candidate value into its own run, both Lemma-1 sides; ``reduce``
+    ``psum``s the per-owner contributions and keeps this device's own
+    ``(B, p)`` searches.  No run element ever leaves its device.
+    """
+
+    xp = jnp
+    run_loop = staticmethod(engine.run_fori)
+
+    def __init__(self, run_shard: jax.Array, axis_name: str, lengths, batch):
+        self._run = run_shard
+        self._axis = axis_name
+        self._p = _axis_size(axis_name)
+        self._r = lax.axis_index(axis_name)
+        self._b = batch
+        self._run_ids = jnp.arange(self._p, dtype=jnp.int32)
+        self.width = run_shard.shape[0]
+        self._lengths = lengths  # (p,) global per-run lengths
+        self.lengths = lengths[None, :]  # broadcast vs the (B, p) cuts
+        self.owner_ids = self._r  # I own only my run's counts
+        self.query_ids = self._run_ids[None, None, :]
+        self.owner_lengths = lengths[self._r]
+
+    def init_bounds(self, i):
+        # + i*0 keeps shard_map's varying-axes type aligned with the body
+        # (i is per-device inside shard_map).
+        lo = jnp.zeros((self._b, self._p), jnp.int32) + i * 0
+        hi = jnp.broadcast_to(self.lengths, (self._b, self._p)) + i * 0
+        return lo, hi
+
+    def values(self, t):
+        # Publish every device's candidate indices: (p, B, p); entry
+        # [d, q, rp] is device d's probe into run rp for its rank i[q].
+        cand = lax.all_gather(t, self._axis)
+        # Owners answer the value lookups: my column rp == r.
+        mine = self._run[jnp.clip(cand[:, :, self._r], 0, self.width - 1)]
+        return lax.psum(
+            jnp.where(
+                self._run_ids[None, None, :] == self._r,
+                mine[:, :, None],
+                jnp.zeros((), self._run.dtype),
+            ),
+            self._axis,
+        )  # (p, B, p): vals[d, q, rp] = run_rp[cand[d, q, rp]]
+
+    def counts(self, x):
+        # My Lemma-1 count contribution for every candidate value (the
+        # tie-break side is selected by the engine against owner_ids).
+        flat = x.reshape(-1)
+        le = jnp.searchsorted(self._run, flat, side=SIDE_TIES)
+        lt = jnp.searchsorted(self._run, flat, side=SIDE_STRICT)
+        shape = (self._p, self._b, self._p)
+        return (
+            le.astype(jnp.int32).reshape(shape),
+            lt.astype(jnp.int32).reshape(shape),
+        )
+
+    def reduce(self, cnt):
+        return lax.psum(cnt, self._axis)[self._r]  # (B, p) — my searches
 
 
 def distributed_co_rank_kway(
@@ -175,14 +216,14 @@ def distributed_co_rank_kway(
 
     Every round costs one ``all_gather`` of ``(B, p)`` int32 candidates
     and two ``psum``s of ``(p, B, p)`` scalars; the round count is the
-    static ``ceil(log2 w) + 1``.  No run element ever leaves its device.
+    engine's static ``kway_round_bound(w)``.  No run element ever
+    leaves its device.
     """
     p = _axis_size(axis_name)
     r = lax.axis_index(axis_name)
     w = run_shard.shape[0]
     i = jnp.asarray(i, jnp.int32)
     b = i.shape[0]
-    run_ids = jnp.arange(p, dtype=jnp.int32)
     if length is None:
         lengths = jnp.full((p,), w, jnp.int32)
     else:
@@ -190,62 +231,13 @@ def distributed_co_rank_kway(
             jnp.asarray(length, jnp.int32), axis_name
         )  # (p,)
 
-    def merged_rank(t: jax.Array) -> jax.Array:
-        """rank(r', t[., r']) for this device's candidates ``t`` (B, p)."""
-        # Publish every device's candidate indices: (p, B, p); entry
-        # [d, q, rp] is device d's probe into run rp for its rank i[q].
-        cand = lax.all_gather(t, axis_name)
-        # Owners answer the value lookups: my column rp == r.
-        mine = run_shard[jnp.clip(cand[:, :, r], 0, w - 1)]  # (p, B)
-        vals = lax.psum(
-            jnp.where(
-                run_ids[None, None, :] == r,
-                mine[:, :, None],
-                jnp.zeros((), run_shard.dtype),
-            ),
-            axis_name,
-        )  # (p, B, p): vals[d, q, rp] = run_rp[cand[d, q, rp]]
-        # My Lemma-1 count contribution for every candidate value: runs
-        # before the candidate's own run count ties (<=, side='right'),
-        # runs after it count strictly (<, side='left').
-        flat = vals.reshape(-1)
-        ssl = jnp.searchsorted(run_shard, flat, side="left")
-        ssr = jnp.searchsorted(run_shard, flat, side="right")
-        cnt = jnp.where(
-            r < run_ids[None, None, :],
-            ssr.astype(jnp.int32).reshape(p, b, p),
-            ssl.astype(jnp.int32).reshape(p, b, p),
-        )
-        cnt = jnp.where(r == run_ids[None, None, :], 0, cnt)
-        cnt = jnp.minimum(cnt, lengths[r])  # never count my padding
-        ranks = lax.psum(cnt, axis_name) + cand  # (p, B, p)
-        return ranks[r]  # (B, p) — my own searches
-
-    rounds = max(1, w).bit_length() + 1
-
-    def body(_, lo_hi):
-        lo, hi = lo_hi
-        mid = (lo + hi) // 2
-        pred = (mid < lengths[None, :]) & (merged_rank(mid) < i[:, None])
-        return jnp.where(pred, mid + 1, lo), jnp.where(pred, hi, mid)
-
-    # + i*0 keeps shard_map's varying-axes type aligned with the body.
-    lo = jnp.zeros((b, p), jnp.int32) + i[:, None] * 0
-    hi = jnp.broadcast_to(lengths[None, :], (b, p)) + i[:, None] * 0
-    lo, _ = lax.fori_loop(0, rounds, body, (lo, hi))
-    if obs.enabled():
-        # ``rounds == ceil(log2(w + 1)) + 1`` — Prop 1's bound over the
-        # ``w + 1`` candidate cuts, plus the one convergence round the
-        # static lock-step schedule pays.
-        obs.gauge(
-            "splitters.kway_rounds",
-            rounds,
-            bound=max(1, w).bit_length() + 1,
-            w=w,
-            batch=b,
-            device=r,
-        )
-    return lo
+    probe = _CollectiveProbe(run_shard, axis_name, lengths, b)
+    return engine.co_rank_search(
+        i[:, None],
+        probe,
+        metric="splitters.kway_rounds",
+        labels={"w": w, "batch": b, "device": r},
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -276,15 +268,18 @@ def distributed_segment_cuts(
       the complete send/receive schedule of a dropless exchange;
     * column ``s`` equals the ``distributed_co_rank_kway`` cut vector of
       the boundary *rank* ``cuts[:, s].sum()`` (all equal keys sort
-      after the boundary, so value cuts and rank cuts coincide);
+      after the boundary, so value cuts and rank cuts coincide — the
+      engine's ``value_cut_counts`` degenerate case);
     * the cut matrix is the whole metadata: ``O(p * E)`` int32 scalars
       in one ``all_gather`` round — the known boundary values collapse
       the co-rank search's ``O(log w)`` rounds to one.
     """
     bounds = jnp.arange(n_segments + 1, dtype=run_shard.dtype)
-    local = jnp.searchsorted(run_shard, bounds, side="left").astype(jnp.int32)
-    if length is not None:
-        local = jnp.minimum(local, jnp.asarray(length, jnp.int32))
+    local = engine.value_cut_counts(
+        run_shard,
+        bounds,
+        None if length is None else jnp.asarray(length, jnp.int32),
+    )
     cuts = lax.all_gather(local, axis_name)  # (p, n_segments + 1)
     if obs.enabled():
         p = cuts.shape[0]

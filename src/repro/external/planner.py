@@ -7,16 +7,19 @@ driver only needs the cut vectors ``J(lo)`` and ``J(hi)``; the window's
 inputs are exactly ``runs[r][J(lo)_r : J(hi)_r]`` and they sum to
 ``hi - lo``.
 
-:func:`co_rank_kway_host` is the host-side mirror of
-``repro.core.kway.co_rank_kway`` (same lock-step binary search, same
-"run index breaks ties" Lemma-1 side pair) operating on *memory-mapped*
-runs: per round it materializes only the ``k`` candidate boundary
-elements — the O(k) residency bound the streaming merger advertises —
-and issues ``2·k²`` ``searchsorted`` probes, each a binary search whose
-element reads fault in single pages of the mmap.  No run data is ever
-loaded; the planner's footprint is independent of run length.
+:func:`co_rank_kway_host` is the *host instantiation* of the one co-rank
+engine (``repro.core.engine``): the same lock-step bisection body and the
+same run-index tie-break as ``repro.core.kway.co_rank_kway`` — not a
+mirror that has to be kept in sync, the literal same code, fed by a
+numpy :class:`_HostProbe` over *memory-mapped* runs and run by a plain
+Python loop.  Per round it materializes only the ``k`` candidate
+boundary elements — the O(k) residency bound the streaming merger
+advertises — and issues ``2·k²`` ``searchsorted`` probes, each a binary
+search whose element reads fault in single pages of the mmap.  No run
+data is ever loaded; the planner's footprint is independent of run
+length.
 
-Cost per cut: ``ceil(log2 w)+1`` rounds × ``O(k² log w)`` probed
+Cost per cut: ``kway_round_bound(w)`` rounds × ``O(k² log w)`` probed
 elements — scalars, vs the ``O(total)`` a merge would touch.
 """
 
@@ -25,8 +28,59 @@ from __future__ import annotations
 import numpy as np
 
 from repro import obs
+from repro.core import engine
+from repro.core.engine import SIDE_STRICT, SIDE_TIES
 
 __all__ = ["co_rank_kway_host", "window_ranks"]
+
+
+class _HostProbe:
+    """Engine probe over ``k`` host-resident (typically mmap'd) runs.
+
+    ``values`` touches exactly the ``k`` candidate boundary elements;
+    ``counts`` issues ``2k²`` ``np.searchsorted`` probes whose element
+    reads fault in single mmap pages.  All index arithmetic is int64
+    (runs may exceed int32 rank range on disk).
+    """
+
+    xp = np
+    run_loop = staticmethod(engine.run_host)
+
+    def __init__(self, runs, lengths: np.ndarray):
+        k = len(runs)
+        self.runs = runs
+        self.width = int(lengths.max()) if k else 0
+        self.lengths = lengths  # int64 (k,)
+        self.owner_ids = np.arange(k)[:, None]
+        self.query_ids = np.arange(k)[None, :]
+        self.owner_lengths = lengths[:, None]
+
+    def init_bounds(self, i):
+        return np.zeros(len(self.runs), np.int64), self.lengths.copy()
+
+    def values(self, t):
+        # The k candidate boundary elements — the only values resident.
+        k = len(self.runs)
+        x = np.empty(k, dtype=np.asarray(self.runs[0][:0]).dtype)
+        for q in range(k):
+            x[q] = (
+                self.runs[q][min(int(t[q]), int(self.lengths[q]) - 1)]
+                if self.lengths[q]
+                else 0
+            )
+        return x
+
+    def counts(self, x):
+        le = np.stack(
+            [np.searchsorted(r, x, side=SIDE_TIES) for r in self.runs]
+        ).astype(np.int64)
+        lt = np.stack(
+            [np.searchsorted(r, x, side=SIDE_STRICT) for r in self.runs]
+        ).astype(np.int64)
+        return le, lt
+
+    def reduce(self, cnt):
+        return cnt.sum(axis=0)
 
 
 def co_rank_kway_host(
@@ -58,44 +112,19 @@ def co_rank_kway_host(
         lengths = np.asarray(lengths, np.int64)
     total = int(lengths.sum())
     i = min(max(int(i), 0), total)
-    lo = np.zeros(k, np.int64)
     if k == 0 or i == 0:
-        return lo
-    hi = lengths.copy()
-    w = int(lengths.max())
-    rounds = max(1, w).bit_length() + 1
-    rp = np.arange(k)[:, None]
-    r = np.arange(k)[None, :]
+        return np.zeros(k, np.int64)
 
-    for _ in range(rounds):
-        mid = (lo + hi) // 2
-        # The k candidate boundary elements — the only values resident.
-        x = np.empty(k, dtype=np.asarray(runs[0][:0]).dtype)
-        for q in range(k):
-            x[q] = runs[q][min(int(mid[q]), int(lengths[q]) - 1)] if (
-                lengths[q]
-            ) else 0
-        # merged rank of (r, mid_r): mid_r + Lemma-1 counts into every
-        # sibling — ties count toward earlier runs (<= before, < after).
-        cr = np.stack(
-            [np.searchsorted(runs[q], x, side="right") for q in range(k)]
-        ).astype(np.int64)
-        cl = np.stack(
-            [np.searchsorted(runs[q], x, side="left") for q in range(k)]
-        ).astype(np.int64)
-        cnt = np.where(rp < r, cr, cl)
-        cnt = np.minimum(cnt, lengths[:, None])  # never count padding
-        cnt = np.where(rp == r, 0, cnt)
-        rank = mid + cnt.sum(axis=0)
-        pred = (mid < lengths) & (rank < i)
-        lo = np.where(pred, mid + 1, lo)
-        hi = np.where(pred, hi, mid)
+    probe = _HostProbe(runs, lengths)
+    lo = engine.co_rank_search(i, probe)
 
     if obs.enabled():
         # The planner's whole residency: k candidate elements per round
         # (the O(k) bound); searchsorted probes touch pages transiently.
         obs.gauge("external.resident_boundary_elems", k, bound=k)
-        obs.counter("external.plan_probes", k * rounds)
+        obs.counter(
+            "external.plan_probes", k * engine.kway_round_bound(probe.width)
+        )
     return lo
 
 

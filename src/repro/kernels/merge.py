@@ -36,6 +36,7 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import engine
 from repro.core.corank import co_rank_batch
 from repro.core.kway import co_rank_kway_batch
 from repro.core.mergesort import sentinel_max as _sentinel
@@ -95,7 +96,7 @@ def merge_tile_kernel(
             b_win, jnp.clip(b_idx, 0, 2 * s - 1), axis=1
         )
         in_b = (t - jj) < lb  # B[k] exists inside the segment
-        le = a_prev <= b_next
+        le = engine.first_condition_holds(a_prev, b_next)
         # jj == 0 (global j == j_lo + 0 relative start) keeps P true via the
         # low bound; out-of-segment B (k >= lb) also satisfies A[j-1] <= B[k]
         # because the co-rank windows guarantee remaining A fits.
@@ -110,19 +111,20 @@ def merge_tile_kernel(
         return new_lo, new_hi
 
     # ceil(log2(S)) + 1 rounds always suffice for a range of width <= S.
-    rounds = max(1, (s - 1).bit_length() + 1)
+    rounds = engine.kway_round_bound(s - 1)
     jj, _ = lax.fori_loop(0, rounds, body, (low, high))
     kk = t - jj
 
-    # Two-finger decision at (jj, kk): take from A iff A has elements left
-    # and (B exhausted or A[jj] <= B[kk])  — the stability tie-break.
+    # Two-finger decision at (jj, kk): the engine's stability rule —
+    # take from A iff A has elements left and (B exhausted or
+    # A[jj] <= B[kk]).
     a_val = jnp.take_along_axis(
         a_win, jnp.clip(off_a + jj, 0, 2 * s - 1), axis=1
     )
     b_val = jnp.take_along_axis(
         b_win, jnp.clip(off_b + kk, 0, 2 * s - 1), axis=1
     )
-    take_a = (jj < la) & ((kk >= lb) | (a_val <= b_val))
+    take_a = engine.take_first(a_val, b_val, jj < la, kk < lb)
     c_ref[...] = jnp.where(take_a, a_val, b_val)
 
 
@@ -203,14 +205,16 @@ def merge_pallas(
 # ---------------------------------------------------------------------------
 
 
-def _lane_count_search(win, off, limit, x, le, s: int, width: int | None = None):
+def _lane_count_search(
+    win, off, limit, x, ties: bool, s: int, width: int | None = None
+):
     """Per-lane count of window-segment elements below each query.
 
     ``win``: ``(1, width)`` staged buffer (default ``width = 2S``); the
     segment is ``win[off : off + limit]``.  ``x``: ``(1, S)`` per-lane
-    queries.  Counts ``<= x`` when ``le`` else ``< x`` — the Lemma-1
-    side pair.  Branchless binary search, ``ceil(log2 S)+1`` rounds, all
-    lanes at once.
+    queries.  Counts ``<= x`` when ``ties`` else ``< x`` — the engine's
+    Lemma-1 comparison pair (``engine.count_below``).  Branchless binary
+    search, ``ceil(log2 S)+1`` rounds, all lanes at once.
     """
     width = 2 * s if width is None else width
     lo = jnp.zeros_like(x, jnp.int32)
@@ -220,10 +224,10 @@ def _lane_count_search(win, off, limit, x, le, s: int, width: int | None = None)
         lo, hi = lo_hi
         mid = (lo + hi) // 2
         v = jnp.take_along_axis(win, jnp.clip(off + mid, 0, width - 1), axis=1)
-        pred = ((v <= x) if le else (v < x)) & (mid < hi)
+        pred = engine.count_below(v, x, ties=ties) & (mid < hi)
         return jnp.where(pred, mid + 1, lo), jnp.where(pred, hi, mid)
 
-    rounds = max(1, (s - 1).bit_length() + 1)
+    rounds = engine.kway_round_bound(s - 1)
     lo, _ = lax.fori_loop(0, rounds, body, (lo, hi))
     return lo
 
@@ -279,7 +283,8 @@ def merge_kway_tile_kernel(
             if qp == q:
                 continue
             cnt = cnt + _lane_count_search(
-                wins[qp], offs[qp], lens[qp], x, le=(qp < q), s=s
+                wins[qp], offs[qp], lens[qp], x,
+                ties=engine.counts_ties(qp, q), s=s,
             )
         ranks.append(jnp.where(u < lens[q], cnt, s + u))
 
@@ -289,7 +294,7 @@ def merge_kway_tile_kernel(
     jqs = []
     for q in range(k):
         jq = _lane_count_search(
-            ranks[q], jnp.int32(0), jnp.int32(s), t, le=False, s=s, width=s
+            ranks[q], jnp.int32(0), jnp.int32(s), t, ties=False, s=s, width=s
         )
         val = jnp.take_along_axis(
             wins[q], jnp.clip(offs[q] + jq, 0, 2 * s - 1), axis=1
@@ -299,7 +304,7 @@ def merge_kway_tile_kernel(
             best_val, best_ok = val, avail
             best_q = jnp.zeros_like(t)
         else:
-            better = avail & (~best_ok | (val < best_val))
+            better = engine.kfinger_better(val, best_val, avail, best_ok)
             best_val = jnp.where(better, val, best_val)
             best_q = jnp.where(better, jnp.int32(q), best_q)
             best_ok = best_ok | avail

@@ -6,17 +6,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.engine import SIDE_STRICT, SIDE_TIES
+
 __all__ = ["merge_ref", "merge_np", "sort_ref", "topk_ref"]
 
 
 def merge_ref(a: jax.Array, b: jax.Array) -> jax.Array:
-    """Stable merge oracle: element-wise co-ranking in pure jnp."""
+    """Stable merge oracle: element-wise co-ranking in pure jnp.
+
+    (The fully engine-independent oracle is ``merge_np`` — numpy's
+    stable sort; the tie-break sides here come from the engine.)
+    """
     m, n = a.shape[0], b.shape[0]
     pos_a = jnp.arange(m, dtype=jnp.int32) + jnp.searchsorted(
-        b, a, side="left"
+        b, a, side=SIDE_STRICT
     ).astype(jnp.int32)
     pos_b = jnp.arange(n, dtype=jnp.int32) + jnp.searchsorted(
-        a, b, side="right"
+        a, b, side=SIDE_TIES
     ).astype(jnp.int32)
     out = jnp.zeros((m + n,), dtype=jnp.result_type(a, b))
     out = out.at[pos_a].set(a, unique_indices=True)

@@ -16,11 +16,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 from repro.core.compat import shard_map
 
-from repro.core.distributed import (
-    distributed_co_rank,
-    distributed_merge,
-    distributed_sort,
-)
+from repro.distributed.api import distributed_merge, distributed_sort
+from repro.distributed.splitters import distributed_co_rank
 from repro.core.corank import co_rank
 
 

@@ -1,0 +1,128 @@
+"""Distributed lane of the engine equivalence sweep (8 fake devices).
+
+Invoked by tests/test_engine.py; exits nonzero on any failure.  The
+collective instantiations of the co-rank engine —
+``distributed_co_rank_kway`` (k = p = 8, ragged ``length`` sideband) and
+``distributed_co_rank`` (pairwise Algorithm 1 over remote reads) — must
+return exactly the cuts of the device tier and of the brute-force
+oracle on the shared cases in ``_engine_cases``.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.compat import shard_map
+from repro.core.kway import co_rank_kway_batch
+from repro.distributed.splitters import (
+    distributed_co_rank,
+    distributed_co_rank_kway,
+)
+
+from _engine_cases import (
+    kway_cases,
+    oracle_cuts,
+    oracle_pairwise,
+    pairwise_cases,
+    rank_sweep,
+)
+
+
+def check_kway(mesh, p):
+    for name, runs, lengths in kway_cases(p):
+        w = runs.shape[1]
+        total = int(lengths.sum())
+        sweep = np.asarray(rank_sweep(total), np.int64)
+        # Device r asks the sweep shifted by r (distinct per-device
+        # batches, exercising the batched lock-step search).
+        ranks = np.clip(
+            sweep[None, :] + np.arange(p)[:, None], 0, total
+        ).astype(np.int32)
+
+        def spl(i_shard, run_shard, len_shard):
+            return distributed_co_rank_kway(
+                i_shard[0], run_shard[0], "x", length=len_shard[0, 0]
+            )[None]
+
+        fn = shard_map(
+            spl,
+            mesh=mesh,
+            in_specs=(P("x"), P("x"), P("x")),
+            out_specs=P("x"),
+        )
+        cuts = np.asarray(
+            jax.jit(fn)(
+                jnp.asarray(ranks),
+                jnp.asarray(runs),
+                jnp.asarray(lengths)[:, None],
+            )
+        )  # (p, B, p)
+
+        for r in range(p):
+            device = np.asarray(
+                co_rank_kway_batch(
+                    jnp.asarray(ranks[r]),
+                    jnp.asarray(runs),
+                    jnp.asarray(lengths),
+                )
+            )
+            np.testing.assert_array_equal(
+                cuts[r], device, err_msg=f"{name} dev{r}: vs device tier"
+            )
+            for bi, i in enumerate(ranks[r]):
+                np.testing.assert_array_equal(
+                    cuts[r, bi],
+                    oracle_cuts(runs, lengths, int(i)),
+                    err_msg=f"{name} dev{r} i={i}: vs oracle",
+                )
+        print(f"kway[{name}]: OK")
+
+
+def check_pairwise(mesh, p):
+    for name, a, b in pairwise_cases():
+        # Pad both sides up to a multiple of p with their max (padding
+        # past the searched ranks never changes the co-ranks below m+n).
+        def pad(x):
+            t = -(-max(len(x), 1) // p) * p
+            fill = x[-1] if len(x) else np.zeros((), x.dtype)
+            return np.concatenate([x, np.full(t - len(x), fill, x.dtype)])
+
+        ap, bp = pad(a), pad(b)
+        m, n = len(a), len(b)
+
+        def cr(a_, b_):
+            r = jax.lax.axis_index("x")
+            i = (r * 41) % (m + n + 1)
+            j, k = distributed_co_rank(i, a_, b_, "x")
+            return jnp.stack([j, k])[None]
+
+        fn = shard_map(
+            cr, mesh=mesh, in_specs=(P("x"), P("x")), out_specs=P("x")
+        )
+        jk = np.asarray(jax.jit(fn)(jnp.asarray(ap), jnp.asarray(bp)))
+        for r in range(p):
+            i = (r * 41) % (m + n + 1)
+            want = oracle_pairwise(ap, bp, i)
+            assert tuple(jk[r]) == want, (name, r, i, jk[r], want)
+        print(f"pairwise[{name}]: OK")
+
+
+def main():
+    devs = jax.devices()
+    assert len(devs) == 8, devs
+    mesh = Mesh(np.array(devs), ("x",))
+    check_kway(mesh, 8)
+    check_pairwise(mesh, 8)
+    print("ALL OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Cross-layer equivalence sweep: one engine, identical cuts everywhere.
+
+Every instantiation of ``repro.core.engine`` — device ``co_rank`` /
+``co_rank_kway``, host-planner ``co_rank_kway_host``, Pallas
+``merge_kway_pallas`` (interpret), and the 8-device collective searches
+(subprocess lane) — must agree bit-for-bit with the engine-independent
+brute-force oracle on the shared cases in ``_engine_cases``.
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from _engine_cases import (
+    kway_cases,
+    oracle_cuts,
+    oracle_pairwise,
+    pairwise_cases,
+    rank_sweep,
+)
+from repro.core.corank import co_rank
+from repro.core.kway import co_rank_kway_batch
+from repro.external.planner import co_rank_kway_host
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+KWAY_CASES = kway_cases(4)
+CASE_IDS = [name for name, _, _ in KWAY_CASES]
+
+
+@pytest.mark.parametrize("name,a,b", pairwise_cases(),
+                         ids=[c[0] for c in pairwise_cases()])
+def test_pairwise_matches_oracle(name, a, b):
+    m, n = len(a), len(b)
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+    for i in rank_sweep(m + n):
+        res = co_rank(i, aj, bj)
+        assert (int(res.j), int(res.k)) == oracle_pairwise(a, b, i), (
+            name, i, int(res.j), int(res.k))
+
+
+@pytest.mark.parametrize("name,runs,lengths", KWAY_CASES, ids=CASE_IDS)
+def test_kway_device_matches_oracle(name, runs, lengths):
+    total = int(lengths.sum())
+    sweep = rank_sweep(total)
+    cuts = np.asarray(
+        co_rank_kway_batch(
+            jnp.asarray(sweep, jnp.int32),
+            jnp.asarray(runs),
+            jnp.asarray(lengths),
+        )
+    )
+    for row, i in zip(cuts, sweep):
+        np.testing.assert_array_equal(
+            row, oracle_cuts(runs, lengths, i), err_msg=f"{name} i={i}"
+        )
+
+
+@pytest.mark.parametrize("name,runs,lengths", KWAY_CASES, ids=CASE_IDS)
+def test_kway_host_planner_matches_device(name, runs, lengths):
+    total = int(lengths.sum())
+    ragged = [runs[r, : lengths[r]] for r in range(runs.shape[0])]
+    device = np.asarray(
+        co_rank_kway_batch(
+            jnp.asarray(rank_sweep(total), jnp.int32),
+            jnp.asarray(runs),
+            jnp.asarray(lengths),
+        )
+    )
+    for row, i in zip(device, rank_sweep(total)):
+        host = co_rank_kway_host(i, ragged)
+        np.testing.assert_array_equal(host, row, err_msg=f"{name} i={i}")
+        np.testing.assert_array_equal(
+            host, oracle_cuts(runs, lengths, i), err_msg=f"{name} i={i}"
+        )
+
+
+@pytest.mark.parametrize("name,runs,lengths", KWAY_CASES, ids=CASE_IDS)
+def test_pallas_interpret_bitexact(name, runs, lengths):
+    """Interpret-mode kernel merge == brute-force stable order, payload
+    permutation included (the payload pins the tie order exactly)."""
+    from repro.kernels.merge import merge_kway_pallas
+
+    k, w = runs.shape
+    total = int(lengths.sum())
+    ids = (np.arange(k * w, dtype=np.int32)).reshape(k, w)
+    keys, vals = merge_kway_pallas(
+        jnp.asarray(runs),
+        jnp.asarray(ids),
+        lengths=jnp.asarray(lengths),
+        tile=16,
+        interpret=True,
+    )
+    run_ids = np.repeat(np.arange(k), w)
+    offs = np.tile(np.arange(w), k)
+    real = offs < np.asarray(lengths)[run_ids]
+    order = np.lexsort((offs[real], run_ids[real], runs.ravel()[real]))
+    np.testing.assert_array_equal(
+        np.asarray(keys)[:total], runs.ravel()[real][order], err_msg=name
+    )
+    np.testing.assert_array_equal(
+        np.asarray(vals)[:total],
+        ids.ravel()[real][order],
+        err_msg=f"{name}: payload permutation (tie order) drifted",
+    )
+
+
+@pytest.mark.slow
+def test_distributed_cuts_eight_devices():
+    """Subprocess lane: the collective searches on 8 fake devices return
+    the same cuts as the device tier on the shared cases (k = p = 8)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tests" / "_engine_check.py")],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=900,
+    )
+    assert proc.returncode == 0, (
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    )
+    assert "ALL OK" in proc.stdout
