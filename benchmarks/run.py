@@ -19,6 +19,7 @@ _REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 MOE_JSON = str(_REPO_ROOT / "BENCH_moe.json")
 KWAY_JSON = str(_REPO_ROOT / "BENCH_kway.json")
 EXTERNAL_JSON = str(_REPO_ROOT / "BENCH_external.json")
+SERVE_JSON = str(_REPO_ROOT / "BENCH_serve.json")
 
 
 def main() -> None:
@@ -30,6 +31,7 @@ def main() -> None:
         merge_throughput,
         moe_dispatch,
         roofline,
+        serve_decode,
         stability_cost,
     )
 
@@ -45,6 +47,8 @@ def main() -> None:
          lambda: external_sort.main(EXTERNAL_JSON)),
         ("F1: MoE dispatch (framework integration)",
          lambda: moe_dispatch.main(MOE_JSON)),
+        ("S1: serving decode step (continuous batching)",
+         lambda: serve_decode.main(SERVE_JSON)),
         ("G: roofline from dry-run artifacts", roofline.main),
     ]
     failures = 0

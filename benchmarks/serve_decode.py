@@ -1,0 +1,192 @@
+"""Benchmark S1 — continuous-batching decode-step latency.
+
+Two sweeps on the qwen3-0.6b smoke config:
+
+* ``serve_topk/b{batch}/fanout{f}`` — the batched merge-based top-k
+  (``sample_topk_batched``'s cut) over a serving-scale vocab, batch
+  {1, 2, 4, 8} x fanout {2, 4, 16}.  The tournament performs one
+  ``merge_kway_ranked`` cut per round for the *whole batch*: the round
+  count is a function of vocab/fanout geometry only (``rounds=`` in the
+  derived column — identical down each batch column), so the dispatch/
+  fusion count per step is flat in batch size and the extra rows ride
+  inside already-launched ops.  The ``vs_b1`` ratio shows how much of
+  that the timing realises: on parallel hardware (and whenever per-call
+  overhead matters) it is < batch; on a single-core CPU device the cut
+  is bandwidth-bound and ``vs_b1`` ~ batch is the expected reading.
+* ``serve_step/b{batch}`` — one full engine step (ragged decode +
+  batched sample + host scheduling) with every slot active: the latency
+  a request actually observes per token, and the headline sub-linear
+  record — batching decode amortises the model step, so ``vs_b1`` stays
+  well under ``batch`` (tok/s grows with the pool) even on CPU.
+
+Each record also carries the ``serve.topk_merge_rounds`` /
+``serve.topk_candidates`` counters captured from ``repro.obs`` during
+the timed call — the machine-checkable evidence that the merge-cut
+count did not grow with the batch.
+
+``--guard [baseline.json]`` re-times only the ``serve_topk/*`` records
+and exits 1 on a >10% regression against the checked-in
+``BENCH_serve.json`` (min-over-iterations statistic, one 4x-iteration
+retry — same policy as ``kway_throughput --guard``); the no-regression
+lane of ``scripts/verify.sh --serve``.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro import obs
+from repro.serving.sampling import batched_topk
+
+VOCAB = 1 << 17  # serving-scale vocab (qwen3 family is ~152k)
+TOPK = 50
+BATCHES = (1, 2, 4, 8)
+FANOUTS = (2, 4, 16)
+
+
+def _logits(rng, b):
+    return jnp.asarray(rng.standard_normal((b, VOCAB)), jnp.float32)
+
+
+def _tournament_counters(b: int, fanout: int) -> dict:
+    """Capture the serve.topk_* records one batched call emits."""
+    with obs.capture() as records:
+        rng = np.random.default_rng(0)
+        jax.block_until_ready(
+            batched_topk(_logits(rng, b), TOPK, fanout=fanout)
+        )
+    out = {}
+    for r in records:
+        if r["metric"] == "serve.topk_merge_rounds":
+            out["merge_rounds"] = r["value"]
+        elif r["metric"] == "serve.topk_candidates":
+            out["final_cut_candidates"] = r["value"]
+    return out
+
+
+def _topk_timers() -> dict:
+    """``{record name: () -> TimingStats}`` for the guarded subset."""
+    rng = np.random.default_rng(11)
+    timers = {}
+    for fanout in FANOUTS:
+        for b in BATCHES:
+            x = _logits(rng, b)
+            timers[f"serve_topk/b{b}/fanout{fanout}"] = (
+                lambda x=x, f=fanout, **kw: time_fn(
+                    lambda v: batched_topk(v, TOPK, fanout=f), x, **kw
+                )
+            )
+    return timers
+
+
+def _engine_steps(records, rec):
+    """Steady-state full-step latency with every slot active."""
+    from repro.configs.registry import ARCHS, smoke_config
+    from repro.models.transformer import init_params
+    from repro.serving import DecodeEngine, Request
+
+    cfg = smoke_config(ARCHS["qwen3-0.6b"])
+    params, _ = init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(3)
+    base_us = None
+    for b in BATCHES:
+        eng = DecodeEngine(cfg, params, max_len=96, max_batch=b,
+                           queue_depth=2 * b, sampler="topk",
+                           top_k=min(TOPK, cfg.vocab), seed=1)
+        for rid in range(b):
+            eng.submit(Request(rid, rng.integers(1, cfg.vocab, 4,
+                                                 dtype=np.int32), 80))
+        eng.step()  # admit everyone; subsequent steps are steady-state
+        us = time_fn(eng.step)
+        tag = f"{b / (us / 1e6):.0f}tok/s"
+        if b == BATCHES[0]:
+            base_us = us
+        else:
+            tag += f";vs_b1={us / base_us:.2f}x"
+        row(f"serve_step/b{b}", us, tag)
+        rec(f"serve_step/b{b}", us, batch=b,
+            tok_per_s=b / (us / 1e6), vs_b1=us / base_us)
+
+
+def main(json_path: str | None = None):
+    records: list[dict] = []
+
+    def rec(name: str, us: float, **extra):
+        records.append({"name": name, "us_per_call": us, **extra})
+
+    base_by_fanout: dict[int, float] = {}
+    for name, timer in _topk_timers().items():
+        _, btag, ftag = name.split("/")
+        b, fanout = int(btag[1:]), int(ftag[6:])
+        # the serve.topk_* counters are recorded at trace time, so the
+        # obs-enabled capture must run before the jit cache is warm
+        counters = _tournament_counters(b, fanout)
+        us = timer()
+        tag = f"{b * VOCAB / us:.1f}Melem/s"
+        if b == 1:
+            base_by_fanout[fanout] = us
+            vs_b1 = 1.0
+        else:
+            vs_b1 = us / base_by_fanout[fanout]
+            tag += f";vs_b1={vs_b1:.2f}x"
+            sub = "sublinear" if vs_b1 < b else "LINEAR-OR-WORSE"
+            tag += f";{sub}"
+        if "merge_rounds" in counters:
+            tag += f";rounds={counters['merge_rounds']}"
+        row(name, us, tag)
+        rec(name, us, batch=b, fanout=fanout, vs_b1=vs_b1,
+            melem_per_s=b * VOCAB / us, **counters)
+
+    _engine_steps(records, rec)
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"records": records}, f, indent=2, sort_keys=True)
+        print(f"# wrote {json_path}", flush=True)
+    return records
+
+
+def guard(baseline_path: str = "BENCH_serve.json", tol: float = 0.10) -> int:
+    """Fail (return 1) if any ``serve_topk`` record regresses > ``tol``
+    against the checked-in baseline.  Same policy as
+    ``kway_throughput.guard``: min-over-iterations statistic, one 4x
+    retry before a record counts as regressed, new records pass."""
+    with open(baseline_path) as f:
+        baseline = {
+            r["name"]: r["us_per_call"] for r in json.load(f)["records"]
+        }
+    failed = 0
+    for name, timer in _topk_timers().items():
+        base = baseline.get(name)
+        if base is None:
+            row(name, timer(), "no baseline — skipped")
+            continue
+        stats = timer()
+        if stats.min_us / base > 1.0 + tol:
+            stats = timer(iters=20)
+        us = stats.min_us
+        ratio = us / base
+        ok = ratio <= 1.0 + tol
+        row(name, us, f"baseline={base:.0f}us;x{ratio:.2f};"
+            + ("ok" if ok else f"REGRESSION>{tol:.0%}"))
+        failed += not ok
+    if failed:
+        print(f"# bench guard: {failed} record(s) regressed "
+              f"beyond {tol:.0%}", flush=True)
+    else:
+        print("# bench guard: all serve_topk timings within "
+              f"{tol:.0%} of baseline", flush=True)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    if "--guard" in sys.argv[1:]:
+        rest = [a for a in sys.argv[1:] if a != "--guard"]
+        sys.exit(guard(rest[0] if rest else "BENCH_serve.json"))
+    main("BENCH_serve.json")

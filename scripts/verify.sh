@@ -11,6 +11,13 @@
 #                                    # (tier-1 fails loudly if record points
 #                                    # leak into disabled HLO) + the 8-device
 #                                    # counter/JSONL acceptance run
+#   scripts/verify.sh --serve        # continuous-batching serving: batched
+#                                    # top-k/top-p bit-exactness vs the
+#                                    # per-request references, scheduler/pool
+#                                    # property tests, the e2e staggered-
+#                                    # arrival smoke decode, and the
+#                                    # serve_topk no-regression bench guard
+#                                    # (vs BENCH_serve.json)
 #   scripts/verify.sh --external     # out-of-core sort: tmpdir spill files,
 #                                    # small chunks/windows forcing multi-pass
 #                                    # merges, crash-resume + residency bounds;
@@ -51,6 +58,12 @@ case "${1:-}" in
         # the checked-in baseline.
         python -m pytest -q tests/test_engine.py
         exec python -m benchmarks.kway_throughput --guard
+        ;;
+    --serve)
+        # The e2e smoke decode is a @slow subprocess test; the bench guard
+        # re-times the serve_topk records against the checked-in baseline.
+        python -m pytest -q tests/test_serving.py
+        exec python -m benchmarks.serve_decode --guard
         ;;
     --external)
         # Spill files land in pytest tmpdirs; the suite's small chunk /

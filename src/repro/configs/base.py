@@ -67,6 +67,13 @@ class ModelConfig:
     fanout: int = 0  # merge-sort/top-k fan-out (runs merged per pass);
     #                  0 = library defaults (mergesort.DEFAULT_FANOUT,
     #                  topk.TOURNAMENT_FANOUT)
+    # serving (repro.serving): continuous-batching decode defaults.
+    # max_batch is the KV pool's slot capacity (compiled batch dim of the
+    # ragged decode step); queue_depth bounds waiting requests before
+    # submit() applies back-pressure.  Per-arch overrides scale these
+    # with KV-cache cost; launchers override with --max-batch.
+    max_batch: int = 8
+    queue_depth: int = 32
     layout: str = "tp"  # 'tp' (model axis = TP/EP) | 'fsdp' (model axis
     #                     joins the batch axes; weights gathered per layer —
     #                     the right mesh use for sub-4B models, see §Perf)

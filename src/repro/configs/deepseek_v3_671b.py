@@ -31,4 +31,7 @@ CONFIG = ModelConfig(
     param_dtype="bfloat16",
     moe_dispatch="dropless",  # 256 fine-grained experts: capacity slots
     #                           waste ~E/k x memory; exact cuts don't
+    # serving: MLA cache (lock-step fallback path) — modest fixed batch
+    max_batch=4,
+    queue_depth=16,
 )

@@ -13,4 +13,7 @@ CONFIG = ModelConfig(
     vocab=152064,
     qkv_bias=True,
     rope_theta=1e6,
+    # serving: 80 layers of GQA cache make slots expensive — shallow pool
+    max_batch=4,
+    queue_depth=16,
 )

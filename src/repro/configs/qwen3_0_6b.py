@@ -16,4 +16,10 @@ CONFIG = ModelConfig(
     qk_norm=True,
     rope_theta=1e6,
     tie_embeddings=True,
+    # serving: tiny model, cheap GQA cache -> deep slot pool; fanout 4
+    # halves the top-k tournament rounds over the 151936-entry vocab
+    # vs pairwise (see BENCH_serve.json / benchmarks/serve_decode.py)
+    max_batch=16,
+    queue_depth=64,
+    fanout=4,
 )

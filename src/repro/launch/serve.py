@@ -1,14 +1,26 @@
-"""Serving launcher: batched decode with merge-sort sampling.
+"""Serving launcher: continuous-batching decode with merge-based sampling.
 
-``python -m repro.launch.serve --arch qwen3-0.6b --smoke --tokens 32``
+``python -m repro.launch.serve --arch qwen3-0.6b --smoke --requests 8``
 
-Prefill is run once for the prompt batch, then tokens are decoded
-autoregressively with top-k/top-p sampling over the merge-sorted logits.
+Requests arrive staggered (``--arrival-every`` engine steps apart) and
+are admitted into free KV-pool slots *between* decode steps by the
+:class:`~repro.serving.engine.DecodeEngine`: one compiled ragged step
+advances every active slot a token at its own position, and the whole
+batch's next tokens are drawn with the batched merge-based sampler (one
+``merge_kway_ranked`` cut per tournament round, regardless of batch
+size).  Finished slots are recycled immediately — no padding to the
+slowest request, no recompilation as occupancy churns.
+
+Architectures whose decode cache is not the ``gqa`` family (MLA,
+SSM/hybrid) fall back to the original lock-step batch decode: all
+requests start together, prefill is teacher-forced through the decode
+path, and sampling uses the per-request reference samplers.
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import os
 import time
 
@@ -19,75 +31,104 @@ import numpy as np
 from repro import obs
 from repro.configs.registry import ARCHS, smoke_config
 from repro.models.transformer import decode_step, init_cache, init_params
+from repro.serving import DecodeEngine, Request
 from repro.serving.sampling import sample_greedy, sample_topk, sample_topp
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=sorted(ARCHS), default="qwen3-0.6b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=8)
-    ap.add_argument("--tokens", type=int, default=32)
-    ap.add_argument("--sampler", choices=["greedy", "topk", "topp"],
-                    default="topk")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--moe-dispatch", choices=("capacity", "dropless"),
-                    default=None,
-                    help="override ModelConfig.moe_dispatch (MoE archs)")
-    ap.add_argument("--metrics-dir", default="",
-                    help="enable repro.obs metrics; JSONL lands here "
-                         "(overrides ModelConfig.metrics_dir)")
-    ap.add_argument("--profile-steps", type=int, default=0,
-                    help="dump a jax.profiler trace covering the first N "
-                         "decode steps (under <metrics-dir>/profile)")
-    args = ap.parse_args(argv)
-
-    cfg = ARCHS[args.arch]
-    if args.smoke:
-        cfg = smoke_config(cfg)
-    if args.moe_dispatch is not None:
-        import dataclasses
-
-        cfg = dataclasses.replace(cfg, moe_dispatch=args.moe_dispatch)
-    metrics_dir = args.metrics_dir or cfg.metrics_dir
-    if metrics_dir:
-        import dataclasses
-
-        cfg = dataclasses.replace(cfg, metrics_dir=metrics_dir)
-        obs.enable(metrics_dir=metrics_dir)
-
-    params, _ = init_params(cfg, jax.random.key(0))
+def _serve_continuous(cfg, params, args, metrics_dir):
+    """Continuous-batching path (gqa-cache archs)."""
     max_len = args.prompt_len + args.tokens
-    cache = init_cache(cfg, args.batch, max_len)
-
-    rng = np.random.default_rng(0)
-    prompts = jnp.asarray(
-        rng.integers(1, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32
+    eng = DecodeEngine(
+        cfg, params, max_len=max_len,
+        max_batch=args.max_batch or cfg.max_batch,
+        queue_depth=args.queue_depth or cfg.queue_depth,
+        sampler=args.sampler, top_k=min(50, cfg.vocab),
+        seed=args.seed,
     )
-
-    step = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
-    key = jax.random.key(42)
+    rng = np.random.default_rng(0)
+    arrivals = [
+        (i * args.arrival_every,
+         Request(i, rng.integers(1, cfg.vocab, args.prompt_len,
+                                 dtype=np.int32), args.tokens))
+        for i in range(args.requests)
+    ]
 
     if obs.enabled():
-        # Compile-time yardstick for the decode entrypoint's collectives.
-        try:
-            obs.attach_hlo_report(
-                "decode_step",
-                step.lower(params, cache, prompts[:, :1]),
-                arch=cfg.name,
-            )
-        except Exception as e:  # report must never kill serving
-            obs.log_event(
-                "hlo.report_failed", entry="decode_step", error=repr(e)
-            )
+        # Compile-time yardstick for the ragged decode entrypoint.
+        tokens0 = jnp.zeros((eng.pool.capacity, 1), jnp.int32)
+        active0 = jnp.zeros((eng.pool.capacity,), bool)
+        obs.attach_hlo_report(  # logs hlo.report_failed on error
+            "decode_step_ragged",
+            eng._step_fn.lower(params, eng.pool.cache, tokens0, active0),
+            arch=cfg.name,
+        )
 
     profiling = False
     if args.profile_steps > 0:
         obs.start_profile(os.path.join(metrics_dir or ".", "profile"))
         profiling = True
 
-    # teacher-forced prefill through the decode path (batched serving uses
-    # prefill_logits + cache population; the smoke driver keeps it simple)
+    t0 = time.time()
+    i = 0
+    while True:
+        while i < len(arrivals) and arrivals[i][0] <= eng.steps:
+            if not eng.submit(arrivals[i][1]):
+                break  # queue at depth: retry after the next step
+            i += 1
+        if eng.pending == 0 and i == len(arrivals):
+            break
+        obs.set_step(eng.steps)
+        with obs.step_span("decode", eng.steps):
+            info = eng.step()
+        if obs.enabled():
+            obs.flush()
+        if profiling and eng.steps >= args.profile_steps:
+            obs.stop_profile()
+            profiling = False
+        if info["completed"] and args.verbose:
+            print(f"step {eng.steps}: finished rids {info['completed']} "
+                  f"(active {info['active']})")
+    if profiling:
+        obs.stop_profile()
+    if obs.enabled():
+        obs.flush()
+
+    dt = time.time() - t0
+    results = eng.results
+    total = sum(len(t) for t in results.values())
+    print(f"served {len(results)} requests / {total} tokens in "
+          f"{eng.steps} steps, {dt:.2f}s ({total / dt:.1f} tok/s)")
+    for rid in sorted(results)[:2]:
+        print(f"  rid{rid}: {results[rid][:16]}...")
+    eng.scheduler.check_invariants()
+    eng.pool.check_invariants()
+    return results
+
+
+def _serve_lockstep(cfg, params, args, metrics_dir):
+    """Legacy fixed-batch decode (MLA / SSM / hybrid caches)."""
+    batch = args.max_batch or cfg.max_batch
+    max_len = args.prompt_len + args.tokens
+    cache = init_cache(cfg, batch, max_len)
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(1, cfg.vocab, (batch, args.prompt_len)), jnp.int32
+    )
+    step = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
+    key = jax.random.key(args.seed)
+
+    if obs.enabled():
+        obs.attach_hlo_report(  # logs hlo.report_failed on error
+            "decode_step",
+            step.lower(params, cache, prompts[:, :1]),
+            arch=cfg.name,
+        )
+
+    profiling = False
+    if args.profile_steps > 0:
+        obs.start_profile(os.path.join(metrics_dir or ".", "profile"))
+        profiling = True
+
     t0 = time.time()
     logits = None
     with obs.host_span("serve.prefill"):
@@ -108,9 +149,7 @@ def main(argv=None):
                 nxt = sample_topp(sub, logits, p=0.9, k=min(64, cfg.vocab),
                                   fanout=cfg.fanout)
             out_tokens.append(np.asarray(nxt))
-            logits, cache = step(
-                params, cache, nxt[:, None].astype(jnp.int32)
-            )
+            logits, cache = step(params, cache, nxt[:, None].astype(jnp.int32))
         if obs.enabled():
             obs.flush()
         if profiling and i + 1 >= args.profile_steps:
@@ -124,11 +163,57 @@ def main(argv=None):
     dt = time.time() - t0
     gen = np.stack(out_tokens, axis=1)
     print(f"generated {gen.shape} tokens in {dt:.2f}s "
-          f"({args.batch * args.tokens / dt:.1f} tok/s)")
-    for b in range(min(args.batch, 2)):
+          f"({batch * args.tokens / dt:.1f} tok/s) [lock-step fallback]")
+    for b in range(min(batch, 2)):
         print(f"  seq{b}: {gen[b][:16].tolist()}...")
     assert int(cache.length) == max_len
-    return gen
+    return {b: gen[b].tolist() for b in range(batch)}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default="qwen3-0.6b")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="requests to serve (continuous-batching path)")
+    ap.add_argument("--arrival-every", type=int, default=2,
+                    help="engine steps between request arrivals")
+    ap.add_argument("--max-batch", type=int, default=0,
+                    help="KV pool slots (0 = ModelConfig.max_batch)")
+    ap.add_argument("--queue-depth", type=int, default=0,
+                    help="queue bound (0 = ModelConfig.queue_depth)")
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--tokens", type=int, default=32,
+                    help="max new tokens per request")
+    ap.add_argument("--sampler", choices=["greedy", "topk", "topp"],
+                    default="topk")
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--verbose", action="store_true")
+    ap.add_argument("--moe-dispatch", choices=("capacity", "dropless"),
+                    default=None,
+                    help="override ModelConfig.moe_dispatch (MoE archs)")
+    ap.add_argument("--metrics-dir", default="",
+                    help="enable repro.obs metrics; JSONL lands here "
+                         "(overrides ModelConfig.metrics_dir)")
+    ap.add_argument("--profile-steps", type=int, default=0,
+                    help="dump a jax.profiler trace covering the first N "
+                         "decode steps (under <metrics-dir>/profile)")
+    args = ap.parse_args(argv)
+
+    cfg = ARCHS[args.arch]
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    if args.moe_dispatch is not None:
+        cfg = dataclasses.replace(cfg, moe_dispatch=args.moe_dispatch)
+    metrics_dir = args.metrics_dir or cfg.metrics_dir
+    if metrics_dir:
+        cfg = dataclasses.replace(cfg, metrics_dir=metrics_dir)
+        obs.enable(metrics_dir=metrics_dir)
+
+    params, _ = init_params(cfg, jax.random.key(0))
+    if init_cache(cfg, 1, 8).kind == "gqa":
+        return _serve_continuous(cfg, params, args, metrics_dir)
+    return _serve_lockstep(cfg, params, args, metrics_dir)
 
 
 if __name__ == "__main__":

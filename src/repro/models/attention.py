@@ -326,6 +326,9 @@ def decode_attention(q, k_cache, v_cache, cache_len):
     """Single-token decode: q (b, 1, h, hd) vs cache (b, smax, n_kv, hd).
 
     GQA-native — the cache is read once, never repeated to n_heads.
+    ``cache_len`` is the number of valid cache positions: a scalar
+    (lock-step batch) or per-sequence ``(b,)`` lengths (the continuous-
+    batching decode path, where every slot sits at its own position).
     """
     b, _, h, hd = q.shape
     smax, n_kv = k_cache.shape[1], k_cache.shape[2]
@@ -333,7 +336,10 @@ def decode_attention(q, k_cache, v_cache, cache_len):
     qg = (q[:, 0] / math.sqrt(hd)).reshape(b, n_kv, g, hd)
     s = jnp.einsum("bcgd,bkcd->bcgk", qg, k_cache).astype(jnp.float32)
     pos = jnp.arange(smax, dtype=jnp.int32)
-    s = jnp.where(pos[None, None, None, :] < cache_len, s, -jnp.inf)
+    cl = jnp.asarray(cache_len)
+    if cl.ndim:  # per-sequence lengths -> (b, 1, 1, 1) against (..., smax)
+        cl = cl.reshape(b, 1, 1, 1)
+    s = jnp.where(pos[None, None, None, :] < cl, s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
     out = jnp.einsum("bcgk,bkcd->bcgd", p, v_cache)
     return out.reshape(b, 1, h, hd)

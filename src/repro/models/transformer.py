@@ -473,6 +473,82 @@ def decode_step(cfg: ModelConfig, params, cache: Cache, tokens):
     return logits[:, 0].astype(jnp.float32), new_cache
 
 
+def decode_step_ragged(cfg: ModelConfig, params, cache: Cache, tokens,
+                       lengths):
+    """One token for every *slot* at per-slot positions (continuous
+    batching).  tokens: (b, 1); lengths: (b,) int32 per-slot cache
+    lengths — token ``b`` is written at position ``lengths[b]`` and
+    attends over ``lengths[b] + 1`` cache entries.  Returns
+    ``(logits (b, vocab), new_cache)`` with ``new_cache.length ==
+    lengths + 1`` for every slot; the serving engine holds back the
+    lengths of inactive slots itself (they re-write one masked position
+    per step, which the per-slot attention mask never reads as history).
+
+    Only the ``gqa`` cache family carries per-slot positions today
+    (dense / MoE / VLM / audio archs); MLA and SSM caches raise — the
+    serving launcher keeps those archs on the lock-step batch path.
+    """
+    if cache.kind != "gqa":
+        raise NotImplementedError(
+            f"continuous-batching decode supports the 'gqa' cache family; "
+            f"got {cache.kind!r} (use the lock-step decode_step path)"
+        )
+    dtype = jnp.dtype(cfg.dtype)
+    b = tokens.shape[0]
+    lengths = jnp.asarray(lengths, jnp.int32)
+    x = L.embed(params["embed"], tokens, dtype)
+    max_len = _cache_max_len(cfg, cache)
+    if cfg.pos_emb == "sinusoidal":
+        s_table = L.sinusoidal_positions(max_len + 1, cfg.d_model, dtype)
+        x = x + s_table[lengths][:, None, :]
+    cos, sin = _rope_tables(cfg, max_len + 1)
+    positions = lengths[:, None]  # (b, 1) — per-slot rope positions
+    x, new_cache = _decode_gqa_ragged(
+        cfg, params, cache, x, cos, sin, positions, lengths
+    )
+    h = L.rmsnorm(params["final_norm"], x)
+    logits = jnp.einsum(
+        "bsd,vd->bsv", h, _unembed_table(cfg, params).astype(dtype)
+    )
+    return logits[:, 0].astype(jnp.float32), new_cache
+
+
+def _decode_gqa_ragged(cfg, params, cache, x, cos, sin, positions, lengths):
+    kc, vc = cache.data[0], cache.data[1]
+    b = x.shape[0]
+    rows = jnp.arange(b, dtype=jnp.int32)
+
+    def make_body(moe_layer):
+        def body(xx, inp):
+            lp, kl, vl = inp
+            h = L.rmsnorm(lp["ln1"], xx)
+            q, k, v = attn_mod.qkv_project(
+                lp["attn"], h, cos, sin, positions, qk_norm=cfg.qk_norm
+            )
+            # per-slot scatter: slot b's token lands at its own position
+            kl = kl.at[rows, lengths].set(k[:, 0])
+            vl = vl.at[rows, lengths].set(v[:, 0])
+            o = attn_mod.decode_attention(q, kl, vl, lengths + 1)
+            xx = xx + attn_mod.attention_output(lp["attn"], o, xx.dtype)
+            xx = _ffn_block(cfg, lp, xx, moe_layer=moe_layer)
+            return xx, (kl, vl)
+
+        return body
+
+    layers = params["layers"]
+    if cfg.moe and cfg.first_k_dense:
+        nd = cfg.first_k_dense
+        x, (kd, vd) = lax.scan(
+            make_body(False), x, (params["dense_layers"], kc[:nd], vc[:nd])
+        )
+        x, (km, vm) = lax.scan(make_body(cfg.moe), x, (layers, kc[nd:], vc[nd:]))
+        k_new = jnp.concatenate([kd, km], axis=0)
+        v_new = jnp.concatenate([vd, vm], axis=0)
+    else:
+        x, (k_new, v_new) = lax.scan(make_body(cfg.moe), x, (layers, kc, vc))
+    return x, Cache("gqa", (k_new, v_new), lengths + 1)
+
+
 def _cache_max_len(cfg, cache):
     if cache.kind in ("gqa", "hybrid"):
         return cache.data[-1].shape[2]

@@ -100,6 +100,28 @@ Metrics catalog — every record point woven through the hot paths:
                              device merge (double-buffering quality);
                              labels ``k``.
 
+== Serving (continuous batching) ==
+``serve.admitted``           counter: requests moved from the queue
+                             into KV-pool slots this step.
+``serve.completed``          counter: requests retired this step.
+``serve.queue_depth``        gauge: requests waiting for a slot.
+``serve.active_slots``       gauge: occupied slots after admission;
+                             labels ``capacity`` — the harness asserts
+                             value <= capacity on every step.
+``serve.slots_recycled``     counter: slot free() calls (recycling is a
+                             length reset, never a KV zeroing pass).
+``serve.step_latency``       gauge: wall-clock microseconds of one
+                             engine step (ragged decode + batched
+                             sample, blocking); labels ``batch``.
+``serve.topk_merge_rounds``  gauge: merge_kway cuts per batched top-k
+                             call — a function of vocab/fanout geometry
+                             only, NEVER batch size (the one-merge-
+                             per-step claim); labels ``blocks``,
+                             ``fanout``.
+``serve.topk_candidates``    counter: candidate keys entering the final
+                             tournament cut (``batch x runs x k``);
+                             labels ``batch``, ``k``.
+
 == Dispatch / compile ==
 ``kernels.backend_selected`` event, once per (op, backend): which
                              backend ``repro.kernels.ops`` dispatch
@@ -108,6 +130,9 @@ Metrics catalog — every record point woven through the hot paths:
                              ``backend``.
 ``hlo.collectives``          event: HLO-predicted collective bytes of a
                              jitted entrypoint (``attach_hlo_report``).
+``hlo.report_failed``        event: attach_hlo_report swallowed an
+                             exception; labels ``entry``,
+                             ``error_type``, ``error``.
 ``obs.profile_started`` / ``obs.profile_stopped`` events: profiler
                              trace-dump window (``--profile-steps``).
 

@@ -100,7 +100,7 @@ def stop_profile() -> bool:
     return True
 
 
-def attach_hlo_report(name: str, hlo_or_lowered, **labels) -> dict:
+def attach_hlo_report(name: str, hlo_or_lowered, **labels) -> dict | None:
     """Log the HLO-predicted collective traffic of a jitted entrypoint.
 
     ``hlo_or_lowered`` is compiled HLO text, or anything with
@@ -111,15 +111,30 @@ def attach_hlo_report(name: str, hlo_or_lowered, **labels) -> dict:
     ``hlo.collectives`` event, so runtime per-peer byte counters can be
     reconciled against the compiler's schedule (the acceptance check in
     ``tests/_obs_check.py``).
+
+    A report must never kill the launcher that asked for it: any failure
+    (backend refusing to compile for introspection, HLO parse drift, …)
+    is logged as an ``hlo.report_failed`` event carrying the exception
+    type, and ``None`` is returned.
     """
     from repro.launch.hlo_stats import collective_bytes
 
-    txt = hlo_or_lowered
-    if hasattr(txt, "compile"):
-        txt = txt.compile()
-    if hasattr(txt, "as_text"):
-        txt = txt.as_text()
-    stats = collective_bytes(txt)
+    try:
+        txt = hlo_or_lowered
+        if hasattr(txt, "compile"):
+            txt = txt.compile()
+        if hasattr(txt, "as_text"):
+            txt = txt.as_text()
+        stats = collective_bytes(txt)
+    except Exception as e:
+        log_event(
+            "hlo.report_failed",
+            entry=name,
+            error_type=type(e).__name__,
+            error=repr(e),
+            **labels,
+        )
+        return None
     log_event(
         "hlo.collectives",
         entry=name,

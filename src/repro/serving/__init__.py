@@ -1,0 +1,43 @@
+"""Continuous-batching decode service built on the merge engine.
+
+Layout:
+
+* :mod:`repro.serving.scheduler` — FIFO queue + per-slot request
+  progress (pure host bookkeeping, property-tested);
+* :mod:`repro.serving.kv_pool` — fixed-capacity recyclable KV slots over
+  one shared :class:`~repro.models.transformer.Cache` with per-slot
+  lengths (stale KV is masked, never zeroed);
+* :mod:`repro.serving.sampling` — per-request reference samplers and the
+  batched serving forms whose top-k cuts the whole batch's candidate
+  runs with one ``merge_kway_ranked`` call per tournament round;
+* :mod:`repro.serving.engine` — :class:`DecodeEngine`, the per-step
+  admit → ragged decode → batched sample → retire loop.
+
+Entry point: ``launch/serve.py`` (``python -m repro.launch.serve``).
+"""
+
+from repro.serving.engine import DecodeEngine
+from repro.serving.kv_pool import KVPool
+from repro.serving.sampling import (
+    batched_topk,
+    sample_greedy,
+    sample_topk,
+    sample_topk_batched,
+    sample_topp,
+    sample_topp_batched,
+)
+from repro.serving.scheduler import Request, Scheduler, SlotState
+
+__all__ = [
+    "DecodeEngine",
+    "KVPool",
+    "Request",
+    "Scheduler",
+    "SlotState",
+    "batched_topk",
+    "sample_greedy",
+    "sample_topk",
+    "sample_topk_batched",
+    "sample_topp",
+    "sample_topp_batched",
+]

@@ -1,0 +1,110 @@
+"""Fixed-capacity KV/state slot pool for the continuous-batching engine.
+
+The pool owns one model :class:`~repro.models.transformer.Cache` whose
+batch dimension is the slot axis (``capacity`` slots) and whose
+``length`` is a per-slot ``(capacity,)`` vector — the ragged decode path
+(``decode_step_ragged``) writes slot ``s``'s next token at position
+``length[s]`` and masks its attention at ``length[s] + 1``.
+
+Slots are recycled, not reallocated: freeing a slot only returns it to
+the free list and resets its length to zero.  The stale KV bytes left
+behind are *provably* unreadable — every attention read is masked by the
+slot's own length, which restarts at 0 on reuse — so recycling costs one
+int32 store, no cache zeroing.  ``tests/test_serving.py`` pins that
+isolation property (a recycled slot's token stream is byte-identical to
+the same request decoded in a fresh pool).
+
+Allocation order is LIFO over the free list (cheap, and irrelevant to
+results — slot identity never influences tokens); admission *fairness*
+is the scheduler's job, not the pool's.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro import obs
+from repro.configs.base import ModelConfig
+from repro.models.transformer import Cache, init_cache
+
+__all__ = ["KVPool"]
+
+
+class KVPool:
+    """``capacity`` recyclable decode slots over one shared cache.
+
+    Host-side free-list bookkeeping plus the device-side cache pytree;
+    the engine reads/writes ``pool.cache`` around each decode step and
+    calls :meth:`alloc` / :meth:`free` as requests come and go.
+    """
+
+    def __init__(self, cfg: ModelConfig, capacity: int, max_len: int,
+                 dtype=jnp.bfloat16):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        base = init_cache(cfg, capacity, max_len)
+        if base.kind != "gqa":
+            raise NotImplementedError(
+                f"KVPool supports the 'gqa' cache family; got {base.kind!r}"
+            )
+        self.capacity = capacity
+        self.max_len = max_len
+        self.cache = Cache(
+            base.kind, base.data, jnp.zeros((capacity,), jnp.int32)
+        )
+        self._free = list(range(capacity - 1, -1, -1))  # pop() -> slot 0 first
+        self._occupied: set[int] = set()
+
+    # -- slot lifecycle ----------------------------------------------------
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def active_slots(self) -> int:
+        return len(self._occupied)
+
+    def alloc(self) -> int:
+        """Claim a free slot and reset its length to 0 (recycled KV
+        beyond length 0 is masked, never cleared)."""
+        if not self._free:
+            raise RuntimeError("KVPool exhausted: no free slots")
+        slot = self._free.pop()
+        self._occupied.add(slot)
+        self.cache = Cache(
+            self.cache.kind,
+            self.cache.data,
+            self.cache.length.at[slot].set(0),
+        )
+        return slot
+
+    def free(self, slot: int) -> None:
+        """Return a slot to the pool (idempotence is a bug: double-free
+        raises, catching scheduler accounting errors early)."""
+        if slot not in self._occupied:
+            raise RuntimeError(f"free() of slot {slot} not in use")
+        self._occupied.remove(slot)
+        self._free.append(slot)
+        if obs.enabled():
+            obs.counter("serve.slots_recycled", 1)
+
+    def check_invariants(self) -> None:
+        """Pool accounting must always partition the slot set exactly."""
+        free, occ = set(self._free), self._occupied
+        assert len(free) == len(self._free), "free list has duplicates"
+        assert not (free & occ), f"slots both free and occupied: {free & occ}"
+        assert len(free) + len(occ) == self.capacity, (
+            f"slot leak: {len(free)} free + {len(occ)} active "
+            f"!= capacity {self.capacity}"
+        )
+
+    # -- device state ------------------------------------------------------
+
+    def lengths(self) -> jnp.ndarray:
+        """Per-slot cache lengths, ``(capacity,)`` int32."""
+        return self.cache.length
+
+    def set_cache(self, data, lengths) -> None:
+        """Install the post-step cache tensors + per-slot lengths."""
+        self.cache = Cache(self.cache.kind, data, lengths)

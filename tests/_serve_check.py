@@ -1,0 +1,111 @@
+"""End-to-end continuous-batching smoke decode, run in a subprocess.
+
+Invoked by tests/test_serving.py; exits nonzero on any failure.  Serves
+a staggered-arrival request mix through the full stack — launcher-style
+DecodeEngine on the qwen3-0.6b smoke config with obs metrics captured —
+and checks the serving acceptance criteria:
+
+* every submitted request finishes with exactly its ``max_new_tokens``;
+* ``serve.active_slots`` never exceeds the pool capacity on any step
+  (read back from the captured metric stream, not engine internals);
+* admissions + completions reconcile: counters sum to the request
+  count, and the scheduler/pool invariants hold at exit;
+* the per-step merge-cut geometry recorded by
+  ``serve.topk_merge_rounds`` is constant across steps (the tournament
+  never grows with occupancy);
+* a second engine run with the same seed reproduces every token stream
+  byte-for-byte (the serving determinism contract).
+"""
+
+import sys
+
+import numpy as np
+import jax
+
+from repro import obs
+from repro.configs.registry import ARCHS, smoke_config
+from repro.models.transformer import init_params
+from repro.serving import DecodeEngine, Request
+
+CAPACITY = 3
+N_REQUESTS = 7
+SEED = 123
+
+
+def _arrivals(cfg):
+    rng = np.random.default_rng(42)
+    return [
+        (2 * i,
+         Request(i, rng.integers(1, cfg.vocab, 2 + i % 3, dtype=np.int32),
+                 3 + i % 4))
+        for i in range(N_REQUESTS)
+    ]
+
+
+def _serve(cfg, params):
+    eng = DecodeEngine(cfg, params, max_len=32, max_batch=CAPACITY,
+                       queue_depth=4, sampler="topk", top_k=8, seed=SEED)
+    results = eng.run(max_steps=400, arrivals=_arrivals(cfg))
+    eng.scheduler.check_invariants()
+    eng.pool.check_invariants()
+    return eng, results
+
+
+def main() -> int:
+    cfg = smoke_config(ARCHS["qwen3-0.6b"])
+    params, _ = init_params(cfg, jax.random.key(0))
+
+    with obs.capture() as records:
+        eng, results = _serve(cfg, params)
+
+    arrivals = _arrivals(cfg)
+    assert sorted(results) == [r.rid for _, r in arrivals], (
+        f"requests lost: served {sorted(results)}"
+    )
+    for _, req in arrivals:
+        got = len(results[req.rid])
+        assert got == req.max_new_tokens, (
+            f"rid {req.rid}: {got} tokens != {req.max_new_tokens}"
+        )
+    print(f"ok: {len(results)} requests finished in {eng.steps} steps")
+
+    slots = [r for r in records if r["metric"] == "serve.active_slots"]
+    assert slots, "no serve.active_slots records captured"
+    peak = max(r["value"] for r in slots)
+    assert peak <= CAPACITY, (
+        f"active_slots peaked at {peak} > capacity {CAPACITY}"
+    )
+    assert peak == CAPACITY, (
+        f"staggered mix never saturated the pool (peak {peak}); "
+        f"the overlap scenario under test did not occur"
+    )
+    print(f"ok: active_slots <= capacity on all {len(slots)} steps "
+          f"(peak {peak})")
+
+    admitted = sum(r["value"] for r in records
+                   if r["metric"] == "serve.admitted")
+    completed = sum(r["value"] for r in records
+                    if r["metric"] == "serve.completed")
+    recycled = sum(r["value"] for r in records
+                   if r["metric"] == "serve.slots_recycled")
+    assert admitted == completed == recycled == N_REQUESTS, (
+        f"lifecycle counters disagree: admitted {admitted}, "
+        f"completed {completed}, recycled {recycled}"
+    )
+    print("ok: admission/completion/recycle counters reconcile")
+
+    rounds = {r["value"] for r in records
+              if r["metric"] == "serve.topk_merge_rounds"}
+    assert len(rounds) <= 1, (
+        f"merge-cut count varied across steps: {sorted(rounds)}"
+    )
+    print(f"ok: constant tournament geometry (rounds={sorted(rounds)})")
+
+    _, results2 = _serve(cfg, params)
+    assert results == results2, "token streams not reproducible"
+    print("ok: byte-identical streams on rerun")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

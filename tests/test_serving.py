@@ -1,0 +1,339 @@
+"""Serving harness tests: batched merge-based sampling bit-exactness,
+scheduler/pool properties, engine determinism, and the e2e staggered-
+arrival smoke decode (subprocess, @slow).
+
+The batched samplers must be *bit-identical* to the per-request
+references on exactly the inputs where float sorting goes wrong:
+duplicate-heavy logits (ties must resolve to the lower token id),
+``±inf`` entries, and dtype-max magnitudes — at every supported
+tournament fan-out.
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from _prop import given, settings, st
+
+from repro import obs
+from repro.configs.registry import ARCHS, smoke_config
+from repro.core.topk import merge_topk
+from repro.models.transformer import init_params
+from repro.serving import (
+    DecodeEngine,
+    KVPool,
+    Request,
+    Scheduler,
+    batched_topk,
+    sample_topk,
+    sample_topk_batched,
+    sample_topp,
+    sample_topp_batched,
+)
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+FANOUTS = (2, 4, 16)
+F32 = np.float32
+
+
+# ---------------------------------------------------------------------------
+# adversarial logit batteries
+# ---------------------------------------------------------------------------
+
+
+def _case(name: str, b: int = 5, n: int = 1000) -> np.ndarray:
+    rng = np.random.default_rng(
+        {"dups": 101, "inf": 202, "fmax": 303, "equal": 404}[name]
+    )
+    if name == "dups":  # heavy ties: 5 distinct values over 1000 tokens
+        return rng.choice(
+            np.asarray([-2.0, -1.0, 0.0, 1.0, 2.0], F32), size=(b, n)
+        ).astype(F32)
+    if name == "inf":  # ±inf islands in duplicate-heavy noise
+        x = rng.choice(np.asarray([0.0, 1.0], F32), size=(b, n)).astype(F32)
+        x[rng.random((b, n)) < 0.02] = np.inf
+        x[rng.random((b, n)) < 0.02] = -np.inf
+        return x
+    if name == "fmax":  # dtype-max magnitudes (softmax would overflow;
+        #                 the cut itself must still be exact)
+        x = rng.standard_normal((b, n)).astype(F32)
+        x[rng.random((b, n)) < 0.05] = np.finfo(F32).max
+        x[rng.random((b, n)) < 0.05] = np.finfo(F32).min
+        return x
+    assert name == "equal"
+    return np.zeros((b, n), F32)
+
+
+@pytest.mark.parametrize("fanout", FANOUTS)
+@pytest.mark.parametrize("case", ["dups", "inf", "fmax", "equal"])
+def test_batched_topk_bitexact_vs_per_request(case, fanout):
+    """The batched cut must equal the per-request tournament row by row
+    — values AND indices — on tie/inf/dtype-max logits."""
+    logits = _case(case)
+    k = 16
+    bv, bi = batched_topk(jnp.asarray(logits), k, fanout=fanout)
+    for i in range(logits.shape[0]):
+        rv, ri = merge_topk(jnp.asarray(logits[i]), k, fanout=fanout)
+        np.testing.assert_array_equal(np.asarray(bv[i]), np.asarray(rv))
+        np.testing.assert_array_equal(np.asarray(bi[i]), np.asarray(ri))
+
+
+@pytest.mark.parametrize("fanout", FANOUTS)
+@pytest.mark.parametrize("case", ["dups", "inf", "fmax"])
+def test_batched_topk_matches_lax_top_k(case, fanout):
+    """External oracle: jax.lax.top_k breaks ties toward the lower
+    index, exactly our stability rule."""
+    logits = jnp.asarray(_case(case))
+    k = 16
+    bv, bi = batched_topk(logits, k, fanout=fanout)
+    ov, oi = jax.lax.top_k(logits, k)
+    np.testing.assert_array_equal(np.asarray(bv), np.asarray(ov))
+    np.testing.assert_array_equal(np.asarray(bi), np.asarray(oi))
+
+
+@pytest.mark.parametrize("fanout", FANOUTS)
+def test_equal_logits_resolve_to_lowest_token_ids(fanout):
+    vals, idx = batched_topk(jnp.asarray(_case("equal")), 8, fanout=fanout)
+    np.testing.assert_array_equal(
+        np.asarray(idx), np.tile(np.arange(8, dtype=np.int32), (5, 1))
+    )
+    assert np.all(np.asarray(vals) == 0.0)
+
+
+@pytest.mark.parametrize("fanout", FANOUTS)
+@pytest.mark.parametrize("case", ["dups", "inf"])
+def test_sample_topk_batched_matches_reference(case, fanout):
+    """Same per-row keys => identical token draws (probs are built from
+    bit-identical cut values, so the categorical sees the same table)."""
+    logits = jnp.asarray(_case(case, b=6, n=512))
+    key = jax.random.key(3)
+    ref = sample_topk(key, logits, k=16, fanout=fanout)
+    keys = jax.random.split(key, 6)  # the reference's internal split
+    got = sample_topk_batched(keys, logits, k=16, fanout=fanout)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+@pytest.mark.parametrize("fanout", FANOUTS)
+@pytest.mark.parametrize("case", ["dups", "inf"])
+def test_sample_topp_batched_matches_reference(case, fanout):
+    """The value-keyed nucleus cut must reproduce the reference's
+    ``cum - probs < p`` prefix mask exactly."""
+    logits = jnp.asarray(_case(case, b=6, n=512))
+    key = jax.random.key(5)
+    ref = sample_topp(key, logits, p=0.7, k=32, fanout=fanout)
+    keys = jax.random.split(key, 6)
+    got = sample_topp_batched(keys, logits, p=0.7, k=32, fanout=fanout)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+# ---------------------------------------------------------------------------
+# scheduler / pool properties
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = smoke_config(ARCHS["qwen3-0.6b"])
+    params, _ = init_params(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def test_fifo_admission_order():
+    sched = Scheduler(max_batch=2, queue_depth=8)
+    for rid in range(6):
+        assert sched.submit(Request(rid, np.asarray([1]), 1))
+    assert [r.rid for _, r in sched.admit([0, 1])] == [0, 1]
+    sched.complete(0)
+    assert [r.rid for _, r in sched.admit([0])] == [2]
+    sched.check_invariants()
+
+
+def test_queue_depth_backpressure():
+    sched = Scheduler(max_batch=1, queue_depth=2)
+    assert sched.submit(Request(0, np.asarray([1]), 1))
+    assert sched.submit(Request(1, np.asarray([1]), 1))
+    assert not sched.submit(Request(2, np.asarray([1]), 1))  # shed, not drop
+    sched.check_invariants()
+    assert sched.pending == 2
+
+
+def test_pool_double_free_and_exhaustion_raise(smoke_model):
+    cfg, _ = smoke_model
+    pool = KVPool(cfg, capacity=2, max_len=8)
+    a, b = pool.alloc(), pool.alloc()
+    with pytest.raises(RuntimeError, match="exhausted"):
+        pool.alloc()
+    pool.free(a)
+    with pytest.raises(RuntimeError, match="not in use"):
+        pool.free(a)
+    pool.free(b)
+    pool.check_invariants()
+
+
+def test_pool_recycle_resets_length_only(smoke_model):
+    cfg, _ = smoke_model
+    pool = KVPool(cfg, capacity=2, max_len=8)
+    slot = pool.alloc()
+    pool.set_cache(pool.cache.data, pool.cache.length.at[slot].set(5))
+    pool.free(slot)
+    again = pool.alloc()  # LIFO: same slot comes back
+    assert again == slot
+    assert int(pool.cache.length[slot]) == 0  # recycled: masked, not zeroed
+    pool.check_invariants()
+
+
+@given(st.data())
+@settings(max_examples=15, deadline=None)
+def test_no_slot_leak_random_traces(data):
+    """Conservation + FIFO + pool partition under arbitrary interleaved
+    submit/admit/complete traces (the continuous-batching state machine
+    driven without a model)."""
+    cap = data.draw(st.integers(1, 4))
+    depth = data.draw(st.integers(1, 5))
+    sched = Scheduler(cap, depth)
+    free = list(range(cap))
+    rid = 0
+    for _ in range(data.draw(st.integers(5, 40))):
+        op = data.draw(st.sampled_from(["submit", "admit", "complete"]))
+        if op == "submit":
+            if sched.submit(Request(rid, np.asarray([1, 2]), 1)):
+                rid += 1
+        elif op == "admit":
+            placed = sched.admit(free)
+            free = free[len(placed):]
+        elif op == "complete" and sched.occupied():
+            slot, _ = sched.occupied()[0]
+            sched.complete(slot)
+            free.append(slot)
+        sched.check_invariants()
+        assert len(free) + sched.active_slots == cap
+
+
+# ---------------------------------------------------------------------------
+# engine determinism + slot-recycling isolation (smoke model)
+# ---------------------------------------------------------------------------
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("max_len", 32)
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("queue_depth", 8)
+    kw.setdefault("sampler", "topk")
+    kw.setdefault("top_k", 8)
+    kw.setdefault("seed", 11)
+    return DecodeEngine(cfg, params, **kw)
+
+
+def _arrivals(cfg, n=4):
+    rng = np.random.default_rng(9)
+    return [
+        (i, Request(i, rng.integers(1, cfg.vocab, 2 + i % 2,
+                                    dtype=np.int32), 3 + i % 3))
+        for i in range(n)
+    ]
+
+
+def test_streams_invariant_to_pool_size(smoke_model):
+    """Token streams depend on (seed, rid), never on slot assignment or
+    batch composition: shrinking the pool reorders execution but not
+    one request's tokens."""
+    cfg, params = smoke_model
+    out4 = _engine(cfg, params, max_batch=4).run(arrivals=_arrivals(cfg))
+    out1 = _engine(cfg, params, max_batch=1).run(arrivals=_arrivals(cfg))
+    assert out4 == out1
+
+
+def test_streams_identical_across_two_compilations(smoke_model):
+    """Fixed seed => byte-identical streams even after the jit caches
+    are dropped and every entrypoint recompiles."""
+    cfg, params = smoke_model
+    first = _engine(cfg, params).run(arrivals=_arrivals(cfg))
+    jax.clear_caches()
+    second = _engine(cfg, params).run(arrivals=_arrivals(cfg))
+    assert first == second
+
+
+def test_recycled_slot_matches_fresh_pool(smoke_model):
+    """A request decoded in a recycled slot sees no trace of the slot's
+    previous occupant: same stream as in a brand-new pool."""
+    cfg, params = smoke_model
+    probe = Request(77, np.asarray([3, 1, 4], np.int32), 5)
+    eng = _engine(cfg, params, max_batch=1)
+    eng.submit(Request(5, np.asarray([9, 9, 9, 9], np.int32), 6))
+    out = eng.run(arrivals=[(1, probe)])  # probe reuses rid-5's slot
+    fresh = _engine(cfg, params, max_batch=1).run(
+        arrivals=[(0, Request(77, probe.prompt, probe.max_new_tokens))]
+    )
+    assert out[77] == fresh[77]
+
+
+def test_engine_rejects_oversized_request(smoke_model):
+    cfg, params = smoke_model
+    eng = _engine(cfg, params, max_len=8)
+    with pytest.raises(ValueError, match="exceeds pool max_len"):
+        eng.submit(Request(0, np.arange(1, 7, dtype=np.int32), 4))
+
+
+# ---------------------------------------------------------------------------
+# obs satellites
+# ---------------------------------------------------------------------------
+
+
+def test_attach_hlo_report_logs_failure_type():
+    """attach_hlo_report must swallow failures but leave an event with
+    the exception type behind — never a silent pass, never a crash."""
+    with obs.capture() as records:
+        out = obs.attach_hlo_report("bogus_entry", 12345)
+    assert out is None
+    evs = [r for r in records if r["metric"] == "hlo.report_failed"]
+    assert len(evs) == 1
+    assert evs[0]["labels"]["entry"] == "bogus_entry"
+    assert evs[0]["labels"]["error_type"]  # the type name, not just repr
+
+
+def test_topk_candidates_counter_is_batch_linear_rounds_constant():
+    """The serve.topk_* evidence: merge rounds are a pure function of
+    (vocab, fanout) — identical for batch 1 and 8 — while the final-cut
+    candidate count scales with batch."""
+    rows = {}
+    for b in (1, 8):
+        with obs.capture() as records:
+            jax.block_until_ready(
+                batched_topk(jnp.asarray(_case("dups", b=b)), 8, fanout=4)
+            )
+        rows[b] = {
+            r["metric"]: r["value"] for r in records
+            if r["metric"].startswith("serve.topk")
+        }
+    assert rows[1]["serve.topk_merge_rounds"] == \
+        rows[8]["serve.topk_merge_rounds"]
+    assert rows[8]["serve.topk_candidates"] == \
+        8 * rows[1]["serve.topk_candidates"]
+
+
+# ---------------------------------------------------------------------------
+# e2e smoke decode (subprocess)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow  # full-stack staggered-arrival decode in a subprocess
+def test_serve_smoke_e2e():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tests" / "_serve_check.py")],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=1800,
+    )
+    assert proc.returncode == 0, (
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    )
+    assert "ok: active_slots <= capacity" in proc.stdout
+    assert "ok: byte-identical streams on rerun" in proc.stdout
